@@ -1,0 +1,67 @@
+"""Paper Fig. 5: pk-ratio curves per field x config, the 1 +/- 1% gate, and
+the paper's best-fit configurations (cuZFP (4,4,4,2,2,2); SZ per-field ABS)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis import spectrum
+from repro.data import cosmo
+from repro.foresight.cbench import run_case
+
+# Best-fit configs selected by OUR §V-D guideline run on the synthetic
+# fields (the paper's exact numbers — cuZFP (4,4,4,2,2,2), SZ
+# (0.2,0.4,1e3,2e5,...) — are data-dependent: real 512^3 Nyx fields are
+# smoother per-cell than a 64^3 synthetic box, and real ZFP's group tests
+# buy a few dB over our header-based coder at low rates; see EXPERIMENTS.md
+# §Paper-fidelity deltas). The *procedure* is the reproduction target.
+SZ_BEST = {"baryon_density": 10.0, "dark_matter_density": 1.2, "temperature": 800.0,
+           "vx": 5e5, "vy": 5e5, "vz": 5e5}
+ZFP_BEST = {"baryon_density": 8, "dark_matter_density": 8, "temperature": 8,
+            "vx": 8, "vy": 8, "vz": 8}
+
+
+def run(n: int = 64):
+    nyx = cosmo.nyx_fields(n=n)
+    rows = []
+    recon_sz, recon_zfp = {}, {}
+    total_raw = sz_bytes = zfp_bytes = 0
+    for field, arr in nyx.items():
+        r_sz = run_case("tpu-sz", field, arr, {"eb": SZ_BEST[field]},
+                        keep_reconstruction=True, warmup=0, iters=1)
+        r_zfp = run_case("tpu-zfp", field, arr, {"rate": ZFP_BEST[field]},
+                         keep_reconstruction=True, warmup=0, iters=1)
+        recon_sz[field], recon_zfp[field] = r_sz.reconstructed, r_zfp.reconstructed
+        total_raw += arr.nbytes
+        sz_bytes += arr.nbytes / r_sz.ratio
+        zfp_bytes += arr.nbytes / r_zfp.ratio
+        for name, rec in (("tpu-sz", r_sz), ("tpu-zfp", r_zfp)):
+            ok, dev = spectrum.pk_gate(arr, rec.reconstructed)
+            rows.append((field, name, rec.ratio, ok, dev))
+
+    # composite spectra from the paper: overall density + velocity magnitude
+    od = spectrum.overall_density(nyx["baryon_density"], nyx["dark_matter_density"])
+    for name, recon in (("tpu-sz", recon_sz), ("tpu-zfp", recon_zfp)):
+        od_r = spectrum.overall_density(recon["baryon_density"], recon["dark_matter_density"])
+        ok, dev = spectrum.pk_gate(od, od_r)
+        rows.append(("overall_density", name, np.nan, ok, dev))
+        vm = spectrum.velocity_magnitude(nyx["vx"], nyx["vy"], nyx["vz"])
+        vm_r = spectrum.velocity_magnitude(recon["vx"], recon["vy"], recon["vz"])
+        ok, dev = spectrum.pk_gate(vm, vm_r)
+        rows.append(("velocity_magnitude", name, np.nan, ok, dev))
+
+    overall = {"tpu-sz": total_raw / sz_bytes, "tpu-zfp": total_raw / zfp_bytes}
+    return rows, overall
+
+
+def main() -> None:
+    rows, overall = run()
+    print("field,compressor,ratio,pk_gate_pass,worst_pk_dev")
+    for field, name, ratio, ok, dev in rows:
+        print(f"{field},{name},{ratio:.2f},{ok},{dev:.4f}")
+    for name, cr in overall.items():
+        print(f"OVERALL,{name},{cr:.2f},,")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 4: rate-distortion (PSNR vs bitrate) for TPU-SZ and TPU-ZFP on
+Nyx-like fields and HACC-like particle arrays (PW_REL on velocities)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import cosmo
+from repro.foresight.cbench import run_case
+
+NYX_EBS = {  # ABS bounds spanning the paper's bitrate range, per field scale
+    "baryon_density": [1000.0, 100.0, 10.0, 1.0, 0.2],
+    "dark_matter_density": [100.0, 10.0, 1.0, 0.4],
+    "temperature": [1e5, 1e4, 1e3, 1e2],
+    "vx": [2e6, 2e5, 2e4],
+}
+ZFP_RATES = [2, 4, 8, 16]
+
+
+def run(n: int = 64, rows=None):
+    rows = rows if rows is not None else []
+    nyx = cosmo.nyx_fields(n=n)
+    for field, ebs in NYX_EBS.items():
+        for eb in ebs:
+            r = run_case("tpu-sz", field, nyx[field], {"eb": eb},
+                         keep_reconstruction=False, warmup=0, iters=1)
+            rows.append(("fig4a_nyx", "tpu-sz", field, f"eb={eb:g}", r.bitrate, r.psnr, r.ratio))
+        for rate in ZFP_RATES:
+            r = run_case("tpu-zfp", field, nyx[field], {"rate": rate},
+                         keep_reconstruction=False, warmup=0, iters=1)
+            rows.append(("fig4a_nyx", "tpu-zfp", field, f"rate={rate}", r.bitrate, r.psnr, r.ratio))
+
+    snap = cosmo.hacc_particles(grid=min(n, 48))
+    for field in ("x", "vx"):
+        data = snap.fields[field]
+        if field == "x":
+            for eb in (0.05, 0.005, 0.0005):
+                r = run_case("tpu-sz", field, data, {"eb": eb},
+                             keep_reconstruction=False, warmup=0, iters=1)
+                rows.append(("fig4b_hacc", "tpu-sz", field, f"eb={eb:g}", r.bitrate, r.psnr, r.ratio))
+        else:
+            for pw in (0.1, 0.025, 0.005):
+                r = run_case("tpu-sz", field, data, {"pw_rel": pw},
+                             keep_reconstruction=False, warmup=0, iters=1)
+                rows.append(("fig4b_hacc", "tpu-sz", field, f"pw_rel={pw:g}", r.bitrate, r.psnr, r.ratio))
+        for rate in (4, 8, 16):
+            r = run_case("tpu-zfp", field, data, {"rate": rate},
+                         keep_reconstruction=False, warmup=0, iters=1)
+            rows.append(("fig4b_hacc", "tpu-zfp", field, f"rate={rate}", r.bitrate, r.psnr, r.ratio))
+    return rows
+
+
+def main() -> None:
+    print("table,compressor,field,config,bitrate,psnr_db,ratio")
+    for row in run():
+        t, c, f, cfg, br, ps, ra = row
+        print(f"{t},{c},{f},{cfg},{br:.3f},{ps:.2f},{ra:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled program:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs            (197 TF bf16)
+    memory     = HLO_bytes_per_chip / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw        (~50 GB/s ICI;
+                 the pod axis crosses DCN at ~25 GB/s)
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs * chips), which catches remat and
+redundancy waste. The dominant term is the bottleneck the §Perf loop works
+on. (cost_analysis of the SPMD-partitioned module reports *per-partition*
+numbers, so terms are per-chip directly.)
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import registry
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9  # inter-pod
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+COSTRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "costrun"
+
+
+def param_count(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the registry model specs."""
+    from repro.models.spec import param_count as pc
+
+    model = registry.build_model(cfg)
+    total = pc(model.specs())
+    active = total
+    if cfg.n_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff  # gate+up+down per expert
+        total_experts = cfg.n_layers * cfg.n_experts * expert
+        active = total - total_experts + cfg.n_layers * cfg.top_k * expert
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D tokens rule (training); decode uses 2*N_active per token."""
+    _, active = param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def analyze_cell(path: Path) -> dict | None:
+    """Combine the production dry-run artifact (memory fit, compile proof)
+    with the costrun artifact (loop-corrected flops/bytes/collectives —
+    XLA's cost model counts while-loop bodies once, see costrun.py)."""
+    cell = json.loads(path.read_text())
+    if cell["status"] != "ok":
+        return {"arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+                "status": cell["status"], "skip": cell.get("skip_reason", cell.get("error", ""))[:60]}
+    cfg = registry.get_config(cell["arch"])
+    shape = registry.SHAPES[cell["shape"]]
+    n = cell["n_devices"]
+
+    cost_path = COSTRUN_DIR / path.name
+    source = "dryrun(loop-undercounted)"
+    flops = cell["flops_per_device"]
+    nbytes = cell["bytes_accessed_per_device"]
+    coll = cell["collective_total"]
+    if cost_path.exists():
+        cc = json.loads(cost_path.read_text())
+        if cc.get("status") == "ok":
+            flops = cc["flops_per_device"]
+            nbytes = cc["bytes_per_device"]
+            coll = cc["collective_bytes_per_device"]
+            source = "costrun"
+
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    link = DCN_BW if cell["mesh"] == "multi" else ICI_BW
+    t_x = coll / link
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * n, 1.0)
+    bound = max(terms.values())
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "status": "ok", "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "model_flops": mf,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": min(t_c / bound, 1.0),  # compute / slowest term
+        "peak_gib": cell.get("peak_bytes_per_device", 0) / 2**30,
+        "fits_16gb": cell.get("fits_16gb"),
+        "microbatches": cell.get("microbatches"),
+        "cost_source": source,
+    }
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        r = analyze_cell(f)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        rows = run(mesh)
+        if not rows:
+            continue
+        print(f"## roofline terms ({mesh}-pod), seconds/step per chip")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,useful_ratio,roofline_frac,peak_GiB,fits")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},SKIP:{r['skip']}")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+                  f"{r['collective_s']:.4f},{r['dominant']},{r['useful_compute_ratio']:.3f},"
+                  f"{r['roofline_fraction']:.3f},{r['peak_gib']:.2f},{r['fits_16gb']}")
+
+
+if __name__ == "__main__":
+    main()

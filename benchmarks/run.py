@@ -1,0 +1,73 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report. ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+Sections:
+  fig4  rate-distortion curves (PSNR vs bitrate), SZ + ZFP, Nyx + HACC
+  fig5  power-spectrum pk-ratio gate at the best-fit configs
+  fig6  FoF halo mass-function / count-ratio gate
+  fig7-10  throughput: stage breakdown, modeled TPU kernels, rate scaling
+  vd    §V-D guideline end-to-end (best-fit configs + overall CR)
+  roofline  per (arch x shape x mesh) terms from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    n = 32 if fast else 64
+    t0 = time.time()
+
+    from benchmarks import (guideline_bench, halo_finder, power_spectrum,
+                            rate_distortion, roofline, throughput)
+
+    _section("Fig 4 — rate-distortion (PSNR vs bitrate)")
+    print("table,compressor,field,config,bitrate,psnr_db,ratio")
+    for t, c, f, cfg, br, ps, ra in rate_distortion.run(n=n):
+        print(f"{t},{c},{f},{cfg},{br:.3f},{ps:.2f},{ra:.2f}")
+
+    _section("Fig 5 — power-spectrum pk-ratio gate (1 +/- 1%)")
+    rows, overall = power_spectrum.run(n=n)
+    print("field,compressor,ratio,pk_gate_pass,worst_pk_dev")
+    for field, name, ratio, ok, dev in rows:
+        print(f"{field},{name},{ratio:.2f},{ok},{dev:.4f}")
+    for name, cr in overall.items():
+        print(f"OVERALL,{name},{cr:.2f},,")
+
+    _section("Fig 6 — FoF halo finder gate")
+    hrows = halo_finder.run(grid=32 if fast else 48)
+    cols = list(hrows[0])
+    print(",".join(cols))
+    for r in hrows:
+        print(",".join(str(r[c]) for c in cols))
+
+    _section("Figs 7-10 — throughput (measured CPU + modeled TPU)")
+    for r in throughput.measured_breakdown(n=n):
+        print(r)
+    for r in throughput.modeled_tpu_kernel_throughput():
+        print(r)
+    for r in throughput.throughput_vs_bitrate(n=32 if fast else 48):
+        print(r)
+
+    _section("§V-D — optimization guideline (best-fit configs)")
+    res = guideline_bench.run(n=n)
+    for name, d in res.items():
+        print(f"{name}: overall best-fit CR = {d['overall']:.2f}x")
+        for f, (cfg, cr, ok) in d["per_field"].items():
+            print(f"   {f}: {cfg} -> {cr}x (gate={'pass' if ok else 'FALLBACK'})")
+
+    _section("Roofline — per (arch x shape x mesh) from dry-run artifacts")
+    roofline.main()
+
+    print(f"\nbenchmarks complete in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

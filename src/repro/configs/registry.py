@@ -1,0 +1,111 @@
+"""Architecture registry: ``--arch <id>`` resolution, model construction,
+shape cells, and input_specs (ShapeDtypeStruct stand-ins for the dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+_MODULES = {
+    "whisper-base": "whisper_base",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "hymba-1.5b": "hymba_1p5b",
+    "qwen1.5-110b": "qwen15_110b",
+    "starcoder2-3b": "starcoder2_3b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "minicpm-2b": "minicpm_2b",
+    "internvl2-76b": "internvl2_76b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# long-context decode needs sub-quadratic attention: run only for
+# SSM / hybrid archs; full-attention archs skip (DESIGN.md §5).
+_SUBQUADRATIC_FAMILIES = {"ssm", "hybrid"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ArchConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "vlm"):
+        from repro.models.transformer import DenseLM
+
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+
+        return MoELM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import RWKV6LM
+
+        return RWKV6LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HymbaLM
+
+        return HymbaLM(cfg)
+    if cfg.family in ("audio", "encdec"):
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def supports(cfg: ArchConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell is runnable; else the documented skip."""
+    if shape.name == "long_500k" and shape.kind == "decode":
+        if cfg.family not in _SUBQUADRATIC_FAMILIES:
+            return False, "full-attention arch: 500k decode needs sub-quadratic attention (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell,
+                batch_override: Optional[int] = None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            specs["prefix"] = jax.ShapeDtypeStruct((b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,16 @@
+"""repro.core — the paper's contribution: TPU-native error-bounded lossy
+compression (TPU-SZ, TPU-ZFP) plus the transforms and registry around it."""
+
+from repro.core import api, bitpack, sz, transforms, zfp
+from repro.core.api import CompressionResult, available, get_compressor
+
+__all__ = [
+    "api",
+    "bitpack",
+    "sz",
+    "transforms",
+    "zfp",
+    "CompressionResult",
+    "available",
+    "get_compressor",
+]

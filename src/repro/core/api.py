@@ -1,0 +1,147 @@
+"""Unified compressor registry + pytree (de)compression.
+
+This is the surface the rest of the framework uses: checkpointing, gradient
+collectives, the serving KV cache, CBench sweeps and the benchmarks all go
+through ``get_compressor(name)``.
+
+Modes (paper §II-A):
+  * ``abs``     — error-bounded, |x̂ - x| <= eb           (TPU-SZ)
+  * ``pw_rel``  — pointwise relative via log transform    (TPU-SZ, Liang'18)
+  * ``rate``    — fixed rate, exact bits/value            (TPU-ZFP)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack, sz, transforms, zfp
+
+MAX_CHUNK = 1 << 24  # elements per SZ packing call (int32 bit-offset safety)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionResult:
+    """Host-facing record: payload pytree + exact storage accounting."""
+
+    payload: Any
+    nbytes: int
+    raw_nbytes: int
+    meta: dict[str, Any]
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_nbytes / max(self.nbytes, 1)
+
+    @property
+    def bitrate(self) -> float:
+        return 32.0 * self.nbytes / max(self.raw_nbytes / 4.0, 1.0) / 4.0
+
+
+class SZCompressor:
+    """TPU-SZ front end. Accepts 1-D/2-D/3-D fields; 1-D fields are reshaped
+    to the paper's 3-D partitions before prediction (§IV-B4)."""
+
+    name = "tpu-sz"
+
+    def __init__(self, block_size: int | None = None, reshape_1d: bool = True):
+        self.block_size = block_size
+        self.reshape_1d = reshape_1d
+
+    def _canonical(self, x: jax.Array) -> tuple[jax.Array, dict]:
+        if x.ndim == 1 and self.reshape_1d:
+            parts = transforms.partition_1d(x)
+            shaped = []
+            for p in parts:
+                side = int(np.ceil(len(p) ** (1 / 3)))
+                side = max(4, side)
+                shaped.append(transforms.to_3d(p, (side, side, side)))
+            return shaped, {"orig_len": x.shape[0], "was_1d": True}
+        return [x], {"orig_len": int(np.prod(x.shape)), "was_1d": False}
+
+    def compress(self, x: jax.Array, eb: float | None = None, pw_rel: float | None = None,
+                 **_: Any) -> CompressionResult:
+        raw = int(np.prod(x.shape)) * 4
+        side_bits = 0
+        meta: dict[str, Any] = {"mode": "abs", "eb": eb}
+        signs = None
+        if pw_rel is not None:
+            t = transforms.log_forward(x)
+            x, signs = t.logs, t.signs
+            eb = transforms.pwrel_to_abs(pw_rel)
+            side_bits = transforms.sign_channel_bits(int(np.prod(x.shape)))
+            meta = {"mode": "pw_rel", "pw_rel": pw_rel, "eb_log": eb}
+        if eb is None:
+            raise ValueError("SZ requires eb= (ABS) or pw_rel=")
+        parts, shape_meta = self._canonical(x)
+        comp = [sz.compress(p, eb, self.block_size) for p in parts]
+        nbits = sum(int(c.packed.total_bits) for c in comp) + side_bits
+        payload = {"parts": comp, "signs": signs, "shape": x.shape, **shape_meta}
+        meta.update(shape_meta)
+        return CompressionResult(payload, (nbits + 7) // 8, raw, meta)
+
+    def decompress(self, r: CompressionResult) -> jax.Array:
+        parts = [sz.decompress(c) for c in r.payload["parts"]]
+        if r.payload["was_1d"]:
+            flats = [transforms.from_3d(p, min(transforms.HACC_PARTITION,
+                                               r.payload["orig_len"] - i * transforms.HACC_PARTITION))
+                     for i, p in enumerate(parts)]
+            x = jnp.concatenate(flats)[: r.payload["orig_len"]]
+        else:
+            x = parts[0].reshape(r.payload["shape"])
+        if r.meta["mode"] == "pw_rel":
+            t = transforms.LogTransformed(x, r.payload["signs"], jnp.float32(0))
+            x = transforms.log_inverse(t)
+        return x
+
+
+class ZFPCompressor:
+    """TPU-ZFP front end (fixed-rate). 1-D fields go through the paper's
+    2097152x8x8 reshape; 2-D fields get a trailing unit axis."""
+
+    name = "tpu-zfp"
+
+    def compress(self, x: jax.Array, rate: int | None = None, **_: Any) -> CompressionResult:
+        if rate is None:
+            raise ValueError("ZFP requires rate= (bits/value)")
+        raw = int(np.prod(x.shape)) * 4
+        orig_shape = x.shape
+        if x.ndim == 1:
+            # Paper §IV-B4: cuZFP on HACC uses an (N/64) x 8 x 8 reshape.
+            lead = -(-x.shape[0] // 64)
+            x = transforms.to_3d(x, (lead, 8, 8))
+        elif x.ndim == 2:
+            x = x[:, :, None]
+        c = zfp.compress(x, rate)
+        nbytes = zfp.compressed_nbytes(c)
+        return CompressionResult({"c": c, "orig_shape": orig_shape}, nbytes, raw,
+                                 {"mode": "rate", "rate": rate})
+
+    def decompress(self, r: CompressionResult) -> jax.Array:
+        x = zfp.decompress(r.payload["c"])
+        orig = r.payload["orig_shape"]
+        if len(orig) == 1:
+            return x.reshape(-1)[: orig[0]]
+        if len(orig) == 2:
+            return x[:, :, 0]
+        return x
+
+
+_REGISTRY: dict[str, Callable[..., Any]] = {
+    "tpu-sz": SZCompressor,
+    "tpu-zfp": ZFPCompressor,
+}
+
+
+def get_compressor(name: str, **kwargs: Any):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,154 @@
+"""Block-adaptive fixed-width bit packing — the TPU replacement for cuSZ's
+warp-level Huffman stage.
+
+Huffman coding is branchy and serial; the TPU VPU wants uniform lane work.
+Quantization codes produced by the Lorenzo stage cluster tightly around zero,
+so a per-block fixed width (6-bit header per block) recovers most of the
+entropy-coding win while remaining fully vectorizable:
+
+  * codes are zigzag-mapped to unsigned,
+  * each block of ``BLOCK`` codes is packed at ``ceil(log2(max+1))`` bits,
+  * bit positions never collide, so packing is a scatter-OR (realised as a
+    scatter-add, which XLA fuses) over a worst-case-sized uint32 buffer,
+  * the *actual* compressed size is ``total_bits`` — the storage layer slices
+    the buffer before writing (device buffers must be static-shaped in JAX).
+
+All arithmetic is int32/uint32; callers must keep ``n * 32 < 2**31`` per call
+(the top-level API chunks large fields into partitions, mirroring the paper's
+8 x 2^27 HACC partitioning).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# §Perf iteration on the packer itself: per-block max-width is outlier
+# sensitive, so smaller blocks adapt better. Measured on GRF density at a
+# pk-gate-passing bound: 1024 -> 7.40 bpv, 128 -> 5.83, 64 -> 5.48 (header
+# 8/64 = 0.125 bpv already charged). 64 is the sweet spot.
+BLOCK = 64  # codes per packing block
+_WIDTH_BITS = 8  # per-block header width charged to the bitstream
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("words", "widths", "total_bits"),
+         meta_fields=("n",))
+@dataclasses.dataclass
+class PackedCodes:
+    """Bitstream produced by :func:`pack_codes` (a pytree; ``n`` is static)."""
+
+    words: jax.Array  # uint32[capacity_words] worst-case sized buffer
+    widths: jax.Array  # uint8[n_blocks] per-block code width (0..32)
+    total_bits: jax.Array  # int32[] true payload size incl. headers
+    n: int  # static: number of codes packed
+
+
+def zigzag(v: jax.Array) -> jax.Array:
+    """Map signed int32 -> unsigned so small magnitudes get small codes."""
+    v = v.astype(jnp.int32)
+    return ((v << 1) ^ (v >> 31)).astype(jnp.uint32)
+
+
+def unzigzag(u: jax.Array) -> jax.Array:
+    u = u.astype(jnp.uint32)
+    return ((u >> 1).astype(jnp.int32)) ^ (-(u & 1).astype(jnp.int32))
+
+
+def bitlength(u: jax.Array) -> jax.Array:
+    """Exact integer bit length of uint32 (0 -> 0). No float round-off."""
+    u = u.astype(jnp.uint32)
+    w = jnp.zeros(u.shape, jnp.int32)
+    v = u
+    for s in (16, 8, 4, 2, 1):
+        m = v >= jnp.uint32(1 << s)
+        w = w + m.astype(jnp.int32) * s
+        v = jnp.where(m, v >> s, v)
+    return w + (v > 0).astype(jnp.int32)
+
+
+def _block_layout(n: int, block: int) -> tuple[int, int]:
+    n_blocks = -(-n // block)
+    padded = n_blocks * block
+    return n_blocks, padded
+
+
+@partial(jax.jit, static_argnames=("block",))
+def pack_codes(codes: jax.Array, block: int = BLOCK) -> PackedCodes:
+    """Pack signed int32 ``codes`` (flat) into a block-adaptive bitstream."""
+    n = codes.shape[0]
+    if n * 32 >= 2**31:
+        raise ValueError(f"pack_codes: n={n} too large for int32 bit offsets; chunk the field")
+    n_blocks, padded = _block_layout(n, block)
+    u = zigzag(codes)
+    u = jnp.pad(u, (0, padded - n))
+    ub = u.reshape(n_blocks, block)
+
+    width = jnp.max(bitlength(ub), axis=1)  # int32[n_blocks]
+    block_bits = width * block
+    base = jnp.cumsum(block_bits) - block_bits  # exclusive prefix, int32
+
+    # Absolute bit position of bit 0 of every code.
+    idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
+    blk = jnp.arange(padded, dtype=jnp.int32) // block
+    w_per = width[blk]
+    pos0 = base[blk] + idx_in_block * w_per
+
+    capacity = n + 2  # worst case: 32 bits/code => n words; +2 slack
+    buf = jnp.zeros((capacity,), jnp.uint32)
+    valid = jnp.arange(padded, dtype=jnp.int32) < n
+    for bit in range(32):
+        active = (bit < w_per) & valid
+        p = pos0 + bit
+        word = jnp.where(active, p >> 5, 0)
+        off = (p & 31).astype(jnp.uint32)
+        contrib = jnp.where(active, ((u >> bit) & 1) << off, jnp.uint32(0))
+        buf = buf.at[word].add(contrib, mode="drop")
+
+    total_bits = jnp.sum(block_bits) + jnp.int32(n_blocks * _WIDTH_BITS)
+    return PackedCodes(buf, width.astype(jnp.uint8), total_bits, n)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def unpack_codes(packed: PackedCodes, block: int = BLOCK) -> jax.Array:
+    """Inverse of :func:`pack_codes`; returns int32[n]."""
+    n = packed.n
+    n_blocks, padded = _block_layout(n, block)
+    width = packed.widths.astype(jnp.int32)
+    block_bits = width * block
+    base = jnp.cumsum(block_bits) - block_bits
+
+    idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
+    blk = jnp.arange(padded, dtype=jnp.int32) // block
+    w_per = width[blk]
+    pos0 = base[blk] + idx_in_block * w_per
+
+    u = jnp.zeros((padded,), jnp.uint32)
+    cap = packed.words.shape[0]
+    for bit in range(32):
+        active = bit < w_per
+        p = pos0 + bit
+        word = jnp.clip(p >> 5, 0, cap - 1)
+        off = (p & 31).astype(jnp.uint32)
+        bitval = (packed.words[word] >> off) & 1
+        u = u | jnp.where(active, bitval << bit, jnp.uint32(0))
+    return unzigzag(u[:n])
+
+
+def packed_nbytes(packed: PackedCodes) -> jax.Array:
+    """True storage bytes of the stream (payload + block headers)."""
+    return (packed.total_bits + 7) // 8
+
+
+def to_storage(packed: PackedCodes) -> dict[str, np.ndarray]:
+    """Host-side: slice the worst-case buffer down to the real payload."""
+    bits = int(packed.total_bits)
+    n_words = (bits - int(packed.widths.shape[0]) * _WIDTH_BITS + 31) // 32
+    return {
+        "words": np.asarray(packed.words[:n_words]),
+        "widths": np.asarray(packed.widths),
+        "n": np.asarray(packed.n),
+    }

@@ -1,0 +1,144 @@
+"""TPU-SZ: error-bounded lossy compression via dual-quantized Lorenzo
+prediction (the prediction stage of SZ / GPU-SZ, re-derived for TPU).
+
+Classic SZ predicts each point from *reconstructed* neighbours, creating a
+loop-carried dependency that GPU-SZ fights with blocking. We instead use the
+dual-quantization formulation (cuSZ): prequantize ``q = round(x / (2*eb))``,
+then take the exact integer Lorenzo residual of ``q``. Two consequences:
+
+  * the error bound holds unconditionally: ``|q*2eb - x| <= eb``,
+  * the *inverse* Lorenzo transform over d dimensions is exactly a d-fold
+    inclusive prefix sum of the residuals — ``jax.lax.cumsum`` per axis —
+    which is O(log n) depth and fully lane-parallel on the TPU VPU. The
+    serial raster-scan reconstruction of CPU/GPU-SZ disappears.
+
+Residuals are entropy-reduced with block-adaptive bit packing (see
+``bitpack.py`` for why not Huffman on TPU).
+
+``block_size`` mirrors GPU-SZ's independent data blocking (prediction resets
+at block borders). The paper observes this blocking *lowers* compression
+quality at low bitrates (Fig. 4 discussion); we reproduce that effect and
+default to global prediction (block_size=None) which strictly dominates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("packed", "eb"),
+         meta_fields=("shape", "block_size"))
+@dataclasses.dataclass
+class SZCompressed:
+    """Compressed field (a pytree; shape/block_size are static)."""
+
+    packed: bitpack.PackedCodes
+    eb: jax.Array  # float32[] absolute error bound used
+    shape: tuple[int, ...]  # static
+    block_size: int | None  # static; None => global Lorenzo
+
+
+def lorenzo_residual(q: jax.Array) -> jax.Array:
+    """Exact integer Lorenzo residual: d-fold first difference (int32)."""
+    d = q
+    for axis in range(q.ndim):
+        zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=axis))
+        shifted = jnp.concatenate(
+            [zero, jax.lax.slice_in_dim(d, 0, d.shape[axis] - 1, axis=axis)], axis=axis
+        )
+        d = d - shifted
+    return d
+
+
+def lorenzo_reconstruct(delta: jax.Array) -> jax.Array:
+    """Inverse Lorenzo: d-fold inclusive prefix sum (exact in int32)."""
+    q = delta
+    for axis in range(delta.ndim):
+        q = jnp.cumsum(q, axis=axis)
+    return q
+
+
+def _to_blocks(x: jax.Array, b: int) -> tuple[jax.Array, tuple[int, ...]]:
+    """Pad to multiples of ``b`` and carve independent b^d blocks."""
+    pads = [(0, (-s) % b) for s in x.shape]
+    xp = jnp.pad(x, pads)
+    nd = x.ndim
+    grid = tuple(s // b for s in xp.shape)
+    # (g0,b,g1,b,...) -> (g0,g1,...,b,b,...)
+    shp: list[int] = []
+    for g in grid:
+        shp += [g, b]
+    xb = xp.reshape(shp)
+    perm = list(range(0, 2 * nd, 2)) + list(range(1, 2 * nd, 2))
+    return xb.transpose(perm), xp.shape
+
+
+def _from_blocks(xb: jax.Array, padded_shape: Sequence[int], shape: Sequence[int], b: int) -> jax.Array:
+    nd = len(shape)
+    perm = []
+    for i in range(nd):
+        perm += [i, nd + i]
+    xp = xb.transpose(perm).reshape(padded_shape)
+    return xp[tuple(slice(0, s) for s in shape)]
+
+
+@partial(jax.jit, static_argnames=("block_size",))
+def compress(x: jax.Array, eb, block_size: int | None = None) -> SZCompressed:
+    """Error-bounded (ABS mode) compression of a 1-D/2-D/3-D float field."""
+    # f32 quantize/dequantize roundoff grows with the quantization range
+    # (~|x|max/eb * 2^-24 quanta); SZ-on-doubles never sees this, f32
+    # accelerators do. Shrink the internal bound adaptively so the
+    # *user-facing* |x_hat - x| <= eb holds for any range/eb <= ~5e6
+    # (every paper configuration sits below 2^20).
+    x = x.astype(jnp.float32)
+    eb = jnp.asarray(eb, jnp.float32)
+    kappa = jnp.clip(jnp.max(jnp.abs(x)) / eb * jnp.float32(2.0**-22), 0.0, 0.25)
+    eb_i = eb * (jnp.float32(0.995) - kappa)
+    q = jnp.round(x / (2.0 * eb_i)).astype(jnp.int32)
+    if block_size is None:
+        delta = lorenzo_residual(q)
+    else:
+        qb, _ = _to_blocks(q, block_size)
+        nd = x.ndim
+        flatb = qb.reshape((-1,) + qb.shape[-nd:])
+        delta = jax.vmap(lorenzo_residual)(flatb).reshape(qb.shape)
+    packed = bitpack.pack_codes(delta.reshape(-1))
+    return SZCompressed(packed, eb_i, x.shape, block_size)  # store the bound used
+
+
+@jax.jit
+def decompress(c: SZCompressed) -> jax.Array:
+    codes = bitpack.unpack_codes(c.packed)
+    b = c.block_size
+    if b is None:
+        delta = codes.reshape(c.shape)
+        q = lorenzo_reconstruct(delta)
+    else:
+        nd = len(c.shape)
+        padded_shape = tuple(s + ((-s) % b) for s in c.shape)
+        grid = tuple(s // b for s in padded_shape)
+        blk_shape = grid + (b,) * nd
+        delta = codes.reshape(blk_shape)
+        flatb = delta.reshape((-1,) + (b,) * nd)
+        qb = jax.vmap(lorenzo_reconstruct)(flatb).reshape(blk_shape)
+        q = _from_blocks(qb, padded_shape, c.shape, b)
+        return q.astype(jnp.float32) * (2.0 * c.eb)
+    return q.astype(jnp.float32) * (2.0 * c.eb)
+
+
+def compressed_nbytes(c: SZCompressed) -> jax.Array:
+    return bitpack.packed_nbytes(c.packed)
+
+
+def compression_ratio(c: SZCompressed) -> jax.Array:
+    import numpy as np
+
+    raw = float(np.prod(c.shape)) * 4.0
+    return raw / compressed_nbytes(c).astype(jnp.float32)

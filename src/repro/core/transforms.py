@@ -1,0 +1,70 @@
+"""Field transforms used by the paper's evaluation pipeline.
+
+* ``log_forward``/``log_inverse``: point-wise-relative (PW_REL) error bounds
+  emulated via a natural-log transform + ABS compression of the transformed
+  field (Liang et al. 2018, adopted by the paper §IV-B4 for HACC velocity).
+  Signs and exact zeros are carried in a 2-bit side channel that the CR
+  accounting charges for (the paper's GPU-SZ does the same transformation on
+  the host; we keep it on-device).
+
+* ``to_3d``/``from_3d``: the paper's HACC dimension conversion — 1-D particle
+  arrays are reshaped into 512x512x512 (GPU-SZ) or 2097152x8x8 (cuZFP) 3-D
+  partitions of 2^27 points, zero-padded (§IV-B4 "Dimension conversion").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HACC_PARTITION = 1 << 27  # 2^27 points per partition, as in the paper
+SZ_3D_SHAPE = (512, 512, 512)
+ZFP_3D_SHAPE = (2_097_152, 8, 8)
+
+
+class LogTransformed(NamedTuple):
+    logs: jax.Array  # float32, ln|x| (0 where x == 0)
+    signs: jax.Array  # int8 in {-1, 0, +1}
+    min_log: jax.Array  # float32[] for documentation / debugging
+
+
+def pwrel_to_abs(pw_rel: float) -> float:
+    """ABS bound on ln|x| equivalent to a PW_REL bound on x (Liang'18)."""
+    return float(np.log1p(pw_rel))
+
+
+def log_forward(x: jax.Array) -> LogTransformed:
+    sign = jnp.sign(x).astype(jnp.int8)
+    mag = jnp.abs(x)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    logs = jnp.where(mag > 0, jnp.log(safe), 0.0).astype(jnp.float32)
+    return LogTransformed(logs, sign, jnp.min(logs))
+
+
+def log_inverse(t: LogTransformed) -> jax.Array:
+    return jnp.where(t.signs == 0, 0.0, t.signs.astype(jnp.float32) * jnp.exp(t.logs))
+
+
+def sign_channel_bits(n: int) -> int:
+    """Side-channel cost charged to CR: 2 bits/value (sign + zero flag)."""
+    return 2 * n
+
+
+def to_3d(x1d: jax.Array, shape3d: tuple[int, int, int]) -> jax.Array:
+    """Zero-pad a 1-D array up to prod(shape3d) and reshape (paper §IV-B4)."""
+    n = int(np.prod(shape3d))
+    if x1d.shape[0] > n:
+        raise ValueError(f"1-D field of {x1d.shape[0]} exceeds partition {n}; chunk first")
+    return jnp.pad(x1d, (0, n - x1d.shape[0])).reshape(shape3d)
+
+
+def from_3d(x3d: jax.Array, n: int) -> jax.Array:
+    return x3d.reshape(-1)[:n]
+
+
+def partition_1d(x: jax.Array, part: int = HACC_PARTITION) -> list[jax.Array]:
+    """Split a long 1-D field into paper-style fixed partitions."""
+    return [x[i : i + part] for i in range(0, x.shape[0], part)]

@@ -1,0 +1,6 @@
+"""Foresight — the paper's benchmark/analysis framework: CBench (sweeps),
+PAT (workflows, SLURM or local), Cinema (artifact DB), guideline (§V-D)."""
+
+from repro.foresight import cbench, cinema, guideline, pat
+
+__all__ = ["cbench", "cinema", "guideline", "pat"]

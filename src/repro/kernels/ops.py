@@ -1,0 +1,79 @@
+"""Jitted public wrappers around the Pallas kernels: padding/carving to tile
+multiples, platform dispatch (interpret=True on CPU — the kernels TARGET
+TPU; this container validates them in interpret mode), and integration with
+the repro.core bitstream layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core import zfp as zfp_core
+from repro.kernels import kvc_attention as _kvc
+from repro.kernels import lorenzo3d as _lor
+from repro.kernels import zfp3d as _zfp
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------- TPU-SZ -----
+
+
+def sz_compress_kernel(x: jax.Array, eb: float):
+    """Kernel-path SZ compress of a 3-D field: returns (PackedCodes,
+    padded_shape, eb_i). Tile-blocked prediction (GPU-SZ blocking)."""
+    tz, ty, tw = _lor.TILE
+    pads = [(0, (-s) % t) for s, t in zip(x.shape, (tz, ty, tw))]
+    xp = jnp.pad(x, pads)
+    eb_i = _lor.guarded_eb(xp, eb)
+    delta = _lor.lorenzo3d_quantize(xp, eb_i, interpret=_interpret())
+    packed = bitpack.pack_codes(delta.reshape(-1))
+    return packed, xp.shape, eb_i
+
+
+def sz_decompress_kernel(packed, padded_shape, orig_shape, eb_i) -> jax.Array:
+    delta = bitpack.unpack_codes(packed).reshape(padded_shape)
+    xr = _lor.lorenzo3d_reconstruct(delta, eb_i, interpret=_interpret())
+    return xr[tuple(slice(0, s) for s in orig_shape)]
+
+
+# ------------------------------------------------------------ TPU-ZFP -----
+
+
+def zfp_transform_kernel(x: jax.Array):
+    """Kernel-path ZFP stages 1-3 on a 3-D field: returns (u in sequency
+    order, emax u8, gtops i32) matching repro.core.zfp.block_transform."""
+    blocks = zfp_core._carve_blocks(x.astype(jnp.float32))
+    nb = blocks.shape[0]
+    pad = (-nb) % _zfp.BLOCKS_PER_TILE
+    if pad:
+        blocks = jnp.pad(blocks, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    u, emax, gtops = _zfp.zfp3d_transform(blocks, interpret=_interpret())
+    u = u[:nb][:, zfp_core.PERM]  # sequency order (permutation stays jnp)
+    return u, emax[:nb].astype(jnp.uint8), gtops[:nb]
+
+
+# ---------------------------------------------- compressed-KV attention ----
+
+
+def kvc_attention(q: jax.Array, k_codes, k_scale, v_codes, v_scale, index):
+    """Fused dequant+attention decode step; pads cache to SEQ_CHUNK.
+    q: (B, H, D) — repeat GQA heads before calling."""
+    s = k_codes.shape[1]
+    pad = (-s) % _kvc.SEQ_CHUNK
+    if pad:
+        zc = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zs = ((0, 0), (0, pad), (0, 0))
+        k_codes = jnp.pad(k_codes, zc)
+        v_codes = jnp.pad(v_codes, zc)
+        k_scale = jnp.pad(k_scale, zs)
+        v_scale = jnp.pad(v_scale, zs)
+    return _kvc.kvc_decode_attention(q, k_codes, k_scale, v_codes, v_scale,
+                                     jnp.asarray(index), interpret=_interpret())

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function mirrors its kernel's *semantics* (including tile-blocked
+prediction for lorenzo3d) using only jax.numpy — no pallas imports — so the
+tests cross-validate two independent implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.core import zfp as zfp_core
+from repro.kernels.lorenzo3d import TILE, guarded_eb
+
+# sequency group of each coefficient in x-fastest *index* order
+GROUP_OF_INDEX = np.asarray(
+    [(c % 4) + ((c // 4) % 4) + (c // 16) for c in range(64)], np.int32)
+
+
+def lorenzo3d_quantize_ref(x: jax.Array, eb: float) -> jax.Array:
+    """Tile-blocked dual-quant Lorenzo residual (int32)."""
+    tz, ty, tw = TILE
+    z, y, w = x.shape
+    eb_i = guarded_eb(x, eb)
+    # reciprocal-multiply, matching the kernel exactly (x/a differs in ulps)
+    q = jnp.round(x.astype(jnp.float32) * (1.0 / (2.0 * eb_i))).astype(jnp.int32)
+    qt = q.reshape(z // tz, tz, y // ty, ty, w // tw, tw).transpose(0, 2, 4, 1, 3, 5)
+    d = qt
+    for axis in (3, 4, 5):
+        zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=axis))
+        shifted = jnp.concatenate(
+            [zero, jax.lax.slice_in_dim(d, 0, d.shape[axis] - 1, axis=axis)], axis=axis)
+        d = d - shifted
+    return d.transpose(0, 3, 1, 4, 2, 5).reshape(z, y, w)
+
+
+def lorenzo3d_reconstruct_ref(delta: jax.Array, eb_i: jax.Array) -> jax.Array:
+    tz, ty, tw = TILE
+    z, y, w = delta.shape
+    dt = delta.reshape(z // tz, tz, y // ty, ty, w // tw, tw).transpose(0, 2, 4, 1, 3, 5)
+    for axis in (3, 4, 5):
+        dt = jnp.cumsum(dt, axis=axis)
+    q = dt.transpose(0, 3, 1, 4, 2, 5).reshape(z, y, w)
+    return q.astype(jnp.float32) * (2.0 * jnp.asarray(eb_i, jnp.float32))
+
+
+def zfp3d_transform_ref(blocks: jax.Array):
+    """(NB,4,4,4) -> (u index-order, emax i32, gtops i32) via repro.core.zfp."""
+    n = blocks.shape[0]
+    maxabs = jnp.max(jnp.abs(blocks.astype(jnp.float32)), axis=(1, 2, 3))
+    _, e = jnp.frexp(maxabs)
+    e = jnp.clip(e, -100, 127).astype(jnp.int32)
+    nonzero = maxabs > 0.0
+    scale = zfp_core.exact_exp2(zfp_core.Q - e)
+    ints = jnp.round(blocks.astype(jnp.float32) * scale[:, None, None, None]).astype(jnp.int32)
+    coef = zfp_core._lift3d(ints)
+    u = zfp_core.negabinary(coef.reshape(n, 64))  # index order (no PERM)
+    lens = zfp_core._bitlength32(u)
+    gtops = jnp.zeros((n, zfp_core.N_GROUPS), jnp.int32)
+    gtops = gtops.at[:, GROUP_OF_INDEX].max(lens)  # index-order group map
+    gtops = jnp.where(nonzero[:, None], gtops, 0)
+    emax = jnp.where(nonzero, e + 128, 0).astype(jnp.int32)
+    return u, emax, gtops
+
+
+def kvc_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, index):
+    """Dequantize-then-attend in plain jnp (the unfused two-pass baseline)."""
+    k = k_codes.astype(jnp.float32) * k_scale[..., None]  # (B,S,H,D)
+    v = v_codes.astype(jnp.float32) * v_scale[..., None]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
+    s = k.shape[1]
+    mask = jnp.arange(s)[None, None, :] <= index
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v).astype(q.dtype)

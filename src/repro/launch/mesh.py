@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time — call the functions. The
+dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 *before*
+importing jax (see dryrun.py); everything else sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)  # 256 chips (one v5e pod slice)
+MULTI_POD = (2, 16, 16)  # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever this host has (tests / examples): 1-D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def describe(mesh: jax.sharding.Mesh) -> str:
+    return f"mesh{dict(mesh.shape)} on {mesh.devices.size} devices"

@@ -1,0 +1,199 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The conv1d+mel frontend is a stub per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, T_enc, d_model). Encoder =
+bidirectional pre-LN blocks with learned positions; decoder = causal
+self-attention + cross-attention with learned positions. GELU MLPs and
+LayerNorm throughout (whisper uses LN, not RMS).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.spec import P
+from repro.models.transformer import lm_loss, stack_specs
+
+
+def cross_attention_spec(c) -> dict:
+    return {
+        "wq": P((c.d_model, c.n_heads, c.head_dim), ("embed", "heads", "head_dim")),
+        "wk": P((c.d_model, c.n_kv_heads, c.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": P((c.d_model, c.n_kv_heads, c.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": P((c.n_heads, c.head_dim, c.d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+def cross_attention(p: dict, c, x: jax.Array, mem_k: jax.Array, mem_v: jax.Array) -> jax.Array:
+    """x: (B,S,D); mem_k/mem_v: (B,T,H,K) precomputed from encoder output."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    n_rep = c.n_heads // c.n_kv_heads
+    k, v = L._repeat_kv(mem_k, n_rep), L._repeat_kv(mem_v, n_rep)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * c.head_dim**-0.5
+    probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+
+
+def encode_memory(p: dict, c, enc_out: jax.Array):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.n_encoder_layers > 0 and cfg.encoder_len > 0
+
+    def enc_layer_spec(self) -> dict:
+        c = self.cfg
+        return {
+            "attn_norm": L.layernorm_spec(c.d_model),
+            "attn": L.attention_spec(c.attn()),
+            "mlp_norm": L.layernorm_spec(c.d_model),
+            "mlp": L.mlp_spec(c.d_model, c.d_ff, "gelu"),
+        }
+
+    def dec_layer_spec(self) -> dict:
+        c = self.cfg
+        ac = c.attn()
+        return {
+            "self_norm": L.layernorm_spec(c.d_model),
+            "self_attn": L.attention_spec(ac),
+            "cross_norm": L.layernorm_spec(c.d_model),
+            "cross_attn": cross_attention_spec(ac),
+            "mlp_norm": L.layernorm_spec(c.d_model),
+            "mlp": L.mlp_spec(c.d_model, c.d_ff, "gelu"),
+        }
+
+    def specs(self) -> dict:
+        c = self.cfg
+        return {
+            "enc_pos": P((c.encoder_len, c.d_model), (None, "embed"), "small"),
+            "enc_layers": stack_specs(c.n_encoder_layers, self.enc_layer_spec()),
+            "enc_final": L.layernorm_spec(c.d_model),
+            "embed": L.embedding_spec(c.padded_vocab, c.d_model),
+            "dec_pos": P((c.max_seq, c.d_model), (None, "embed"), "small"),
+            "dec_layers": stack_specs(c.n_layers, self.dec_layer_spec()),
+            "dec_final": L.layernorm_spec(c.d_model),
+        }
+
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        """frames: (B, T_enc, d_model) precomputed embeddings (frontend stub)."""
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.constrain_batch(
+            frames.astype(dt) + params["enc_pos"].astype(dt)[None, : frames.shape[1]])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)  # batch-free
+
+        def enc_layer(lp, x, positions):
+            x = x + L.attention(lp["attn"], c.attn(), L.layernorm(lp["attn_norm"], x),
+                                positions, causal=False)
+            return x + L.mlp(lp["mlp"], L.layernorm(lp["mlp_norm"], x), "gelu")
+
+        layer = jax.checkpoint(enc_layer)
+
+        def body(carry, lp):
+            return layer(lp, carry, positions), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=flags.UNROLL_LAYERS)
+        return L.layernorm(params["enc_final"], x)
+
+    def forward(self, params: dict, tokens: jax.Array,
+                frames: Optional[jax.Array] = None) -> jax.Array:
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        if frames is None:  # degenerate text-only path for smoke parity
+            frames = jnp.zeros((tokens.shape[0], c.encoder_len, c.d_model), dt)
+        enc = self.encode(params, frames)
+        x = L.embed(params["embed"], tokens, dt)
+        x = L.constrain_batch(x + params["dec_pos"].astype(dt)[None, : x.shape[1]])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)  # batch-free
+
+        def dec_layer(lp, x, enc, positions):
+            x = x + L.attention(lp["self_attn"], c.attn(),
+                                L.layernorm(lp["self_norm"], x), positions)
+            mk, mv = encode_memory(lp["cross_attn"], c.attn(), enc)
+            x = x + cross_attention(lp["cross_attn"], c.attn(),
+                                    L.layernorm(lp["cross_norm"], x), mk, mv)
+            return x + L.mlp(lp["mlp"], L.layernorm(lp["mlp_norm"], x), "gelu")
+
+        layer = jax.checkpoint(dec_layer)
+
+        def body(carry, lp):
+            return layer(lp, carry, enc, positions), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=flags.UNROLL_LAYERS)
+        x = L.layernorm(params["dec_final"], x)
+        return L.unembed(params["embed"], x)  # whisper ties embeddings
+
+    def loss(self, params, tokens, labels, frames=None):
+        return lm_loss(self.forward(params, tokens, frames), labels)
+
+    # ------------------------------------------------------------ decode --
+    def cache_spec(self, batch: int, max_len: int, codec: L.KVCodecConfig) -> dict:
+        c = self.cfg
+        per_layer = L.cache_spec(c.attn(), batch, max_len, codec)
+        out = {
+            "self_" + k: jax.ShapeDtypeStruct((c.n_layers,) + v.shape, v.dtype)
+            for k, v in per_layer.items()
+        }
+        out["mem_k"] = jax.ShapeDtypeStruct(
+            (c.n_layers, batch, c.encoder_len, c.n_kv_heads, c.hd), jnp.dtype(c.dtype))
+        out["mem_v"] = jax.ShapeDtypeStruct(
+            (c.n_layers, batch, c.encoder_len, c.n_kv_heads, c.hd), jnp.dtype(c.dtype))
+        return out
+
+    def init_cache(self, batch: int, max_len: int, codec: L.KVCodecConfig,
+                   params: Optional[dict] = None,
+                   frames: Optional[jax.Array] = None) -> dict:
+        cache = {k: jnp.zeros(s.shape, s.dtype)
+                 for k, s in self.cache_spec(batch, max_len, codec).items()}
+        if params is not None and frames is not None:
+            enc = self.encode(params, frames)
+
+            def mk(lp, _):
+                return lp, encode_memory(lp["cross_attn"], self.cfg.attn(), enc)
+
+            _, (mks, mvs) = jax.lax.scan(
+                lambda _, lp: (None, encode_memory(lp["cross_attn"], self.cfg.attn(), enc)),
+                None, params["dec_layers"],
+            )
+            cache["mem_k"], cache["mem_v"] = mks, mvs
+        return cache
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    index: jax.Array, codec: L.KVCodecConfig):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], token[:, None], dt)
+        pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, 0)
+        x = x + pos_emb.astype(dt)[None]
+
+        def body(carry, inp):
+            lp, layer_cache = inp
+            x = carry
+            scache = {k[5:]: v for k, v in layer_cache.items() if k.startswith("self_")}
+            h = L.layernorm(lp["self_norm"], x)
+            a, scache = L.decode_attention(lp["self_attn"], c.attn(), h, scache, codec, index)
+            x = x + a
+            h = L.layernorm(lp["cross_norm"], x)
+            x = x + cross_attention(lp["cross_attn"], c.attn(), h,
+                                    layer_cache["mem_k"], layer_cache["mem_v"])
+            x = x + L.mlp(lp["mlp"], L.layernorm(lp["mlp_norm"], x), "gelu")
+            out_cache = {"self_" + k: v for k, v in scache.items()}
+            out_cache["mem_k"], out_cache["mem_v"] = layer_cache["mem_k"], layer_cache["mem_v"]
+            return x, out_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+        x = L.layernorm(params["dec_final"], x)
+        return L.unembed(params["embed"], x)[:, 0, :], new_cache

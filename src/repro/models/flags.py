@@ -1,0 +1,36 @@
+"""Trace-time costing flags.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so cost_analysis() on scanned models reports per-iteration numbers.
+The costing dry-run (launch/costrun.py) therefore lowers models with
+
+  * the layer scan unrolled (UNROLL_LAYERS),
+  * flash-attention chunking disabled (FLASH_THRESHOLD -> huge, exact
+    quadratic flops; AOT lowering never allocates so the S^2 tensors are
+    metadata only),
+  * linear-attention chunk scans widened to one chunk (WKV/SSD_CHUNK),
+
+at n_layers in {1, 2} and extrapolates linearly. Production lowering keeps
+all loops (small HLO, fast compiles); these flags exist solely so the
+roofline terms are honest.
+"""
+
+UNROLL_LAYERS: bool = False
+FLASH_THRESHOLD: int | None = None  # None => per-config default
+WKV_CHUNK: int | None = None
+SSD_CHUNK: int | None = None
+
+
+def costing(enabled: bool, seq_len: int = 0) -> None:
+    """Toggle costing mode (see module docstring)."""
+    global UNROLL_LAYERS, FLASH_THRESHOLD, WKV_CHUNK, SSD_CHUNK
+    if enabled:
+        UNROLL_LAYERS = True
+        FLASH_THRESHOLD = 1 << 30
+        WKV_CHUNK = max(seq_len, 32)
+        SSD_CHUNK = max(seq_len, 64)
+    else:
+        UNROLL_LAYERS = False
+        FLASH_THRESHOLD = None
+        WKV_CHUNK = None
+        SSD_CHUNK = None

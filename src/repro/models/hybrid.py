@@ -1,0 +1,304 @@
+"""Hymba: hybrid-head LM — every layer runs **attention and an SSM branch in
+parallel** on the same input and fuses their (normalized) outputs
+(arXiv:2411.13676). Plus 128 learnable *meta tokens* prepended to the
+sequence, sliding-window attention in all but three global layers
+(first / middle / last).
+
+TPU adaptation of the SSM branch: we use the Mamba-2 / SSD scalar-decay
+head form (state = 16 per head) rather than Mamba-1's per-(channel, state)
+selective scan: with a scalar per-head decay the chunked recurrence is a
+pure matmul (the (C x C) per-head decay matrix has non-positive exponents,
+so it is f32-stable), mapping onto the MXU exactly like our RWKV-6 kernel.
+Recorded in DESIGN.md §Arch-applicability.
+
+``long_500k`` runs on this arch: the attention branch is sliding-window
+(O(window) cache) and the SSM branch is O(1) state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.spec import P
+from repro.models.transformer import lm_loss, stack_specs
+
+CHUNK = 64
+
+
+def ssd_spec(c: ArchConfig) -> dict:
+    d, n = c.d_model, c.ssm_state
+    h = c.ssm_heads or c.n_heads
+    hd = d // h
+    return {
+        "w_in": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_bc": P((d, h, 2 * n), ("embed", "heads", None)),
+        "w_dt": P((d, h), ("embed", "heads"), "small"),
+        "dt_bias": P((h,), ("heads",), "zeros"),
+        "a_log": P((h,), ("heads",), "zeros"),
+        "skip": P((h, hd), ("heads", "head_dim"), "ones"),
+        "w_out": P((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def ssd_chunked(xh, B, C, dt, a, state0=None):
+    """SSD scan. xh: (b,T,H,P); B,C: (b,T,H,N); dt: (b,T,H) >=0; a: (H,) <0.
+
+    h_t = exp(a*dt_t) h_{t-1} + dt_t * (B_t ⊗ x_t);   y_t = C_t · h_t
+    Chunked matmul form: scores[t,s] = (C_t·B_s) exp(A_t - A_s) dt_s, exponents <= 0.
+    """
+    b, t, H, Pd = xh.shape
+    n = B.shape[-1]
+    c = flags.SSD_CHUNK or CHUNK
+    pad = (-t) % c
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    tt = xh.shape[1]
+    nch = tt // c
+    r4 = lambda x: x.reshape(b, nch, c, H, x.shape[-1]).transpose(1, 0, 2, 3, 4)
+    r3 = lambda x: x.reshape(b, nch, c, H).transpose(1, 0, 2, 3)
+    xc, Bc, Cc, dc = r4(xh), r4(B), r4(C), r3(dt)
+
+    def step(S, inp):
+        xb, Bb, Cb, db = inp  # (b,c,H,*) f32
+        la = a[None, None, :] * db  # per-step log decay (b,c,H), <= 0
+        F = jnp.cumsum(la, axis=1)
+        E = F - la
+        inter = jnp.einsum("bchn,bhnp->bchp", Cb * jnp.exp(E)[..., None], S)
+        Dlog = E[:, :, None] - F[:, None, :]  # (b,c,c,H)
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+        # diagonal: decay exp(E_t - F_t) = exp(-la_t)? use s<=t with s==t giving
+        # exp(E_t - F_t) = exp(-la_t) ... the discrete SSD uses D[t,t]=1 => mask s<t
+        # plus explicit dt_t B_t x_t C_t term:
+        maskl = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None]
+        D = jnp.where(maskl, jnp.exp(jnp.minimum(Dlog, 0.0)), 0.0)
+        scores = jnp.einsum("bthn,bshn,btsh->btsh", Cb, Bb, D) * db[:, None, :, :]
+        intra = jnp.einsum("btsh,bshp->bthp", scores, xb)
+        diag = jnp.einsum("bthn,bthn->bth", Cb, Bb) * db
+        intra = intra + diag[..., None] * xb
+        Ftot = F[:, -1]  # (b,H)
+        S_new = jnp.exp(Ftot)[..., None, None] * S + jnp.einsum(
+            "bshn,bshp->bhnp", Bb * (jnp.exp(Ftot[:, None] - F) * db)[..., None], xb
+        )
+        return S_new, inter + intra
+
+    S0 = jnp.zeros((b, H, n, Pd), jnp.float32) if state0 is None else state0
+    Sf, ys = jax.lax.scan(
+        step, S0,
+        (xc.astype(jnp.float32), Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+         dc.astype(jnp.float32)),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tt, H, Pd)[:, :t]
+    return y, Sf
+
+
+def ssd_step(xh, B, C, dt, a, S):
+    """Recurrent decode step. xh: (b,H,P); B,C: (b,H,N); dt: (b,H)."""
+    la = (a[None, :] * dt).astype(jnp.float32)
+    Bx = jnp.einsum("bhn,bhp->bhnp", B, xh) * dt[..., None, None]
+    S_new = jnp.exp(la)[..., None, None] * S + Bx
+    y = jnp.einsum("bhn,bhnp->bhp", C, S_new)
+    return y, S_new
+
+
+def ssd_apply(p: dict, c: ArchConfig, x: jax.Array, state0=None):
+    h = c.ssm_heads or c.n_heads
+    n = c.ssm_state
+    dt_ = x.dtype
+    xh = jnp.einsum("bsd,dhp->bshp", x, p["w_in"].astype(dt_))
+    bc = jnp.einsum("bsd,dhm->bshm", x, p["w_bc"].astype(dt_)).astype(jnp.float32)
+    B, C = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y32, S = ssd_chunked(xh.astype(jnp.float32), B, C, dt, a, state0)
+    y = y32.astype(dt_) + xh * p["skip"].astype(dt_)[None, None]
+    return jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(dt_)), S
+
+
+class HymbaLM:
+    """Parallel attention+SSD heads, meta tokens, mixed global/SWA layers."""
+
+    GLOBAL_LAYERS = "first_middle_last"
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def _windows(self) -> jnp.ndarray:
+        c = self.cfg
+        w = jnp.full((c.n_layers,), c.window or 1024, jnp.int32)
+        glb = jnp.int32(1 << 30)
+        return w.at[0].set(glb).at[c.n_layers // 2].set(glb).at[c.n_layers - 1].set(glb)
+
+    def layer_spec(self) -> dict:
+        c = self.cfg
+        return {
+            "norm": L.rmsnorm_spec(c.d_model),
+            "attn": L.attention_spec(c.attn()),
+            "ssd": ssd_spec(c),
+            "attn_out_norm": L.rmsnorm_spec(c.d_model),
+            "ssd_out_norm": L.rmsnorm_spec(c.d_model),
+            "beta_attn": P((1,), (None,), "ones"),
+            "beta_ssd": P((1,), (None,), "ones"),
+            "mlp_norm": L.rmsnorm_spec(c.d_model),
+            "mlp": L.mlp_spec(c.d_model, c.d_ff, c.mlp_kind),
+        }
+
+    def specs(self) -> dict:
+        c = self.cfg
+        return {
+            "embed": L.embedding_spec(c.padded_vocab, c.d_model),
+            "meta": P((c.n_meta_tokens, c.d_model), (None, "embed"), "small"),
+            "layers": stack_specs(c.n_layers, self.layer_spec()),
+            "final_norm": L.rmsnorm_spec(c.d_model),
+            "unembed": {"table": P((c.padded_vocab, c.d_model), ("vocab", "embed"), "small")},
+        }
+
+    def _fused_layer(self, lp, window, x, positions):
+        c = self.cfg
+        h = L.rmsnorm(lp["norm"], x)
+        ac = L.AttnConfig(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.hd, rope_theta=c.rope_theta, window=None,
+        )
+        # dynamic per-layer window (scanned): the window arrives as a traced
+        # scalar, which both the materialized and the flash-chunked mask
+        # paths accept. §Perf: the flash path keeps 32k prefill at
+        # O(S*chunk) instead of a (B,H,32k,32k) f32 score tensor.
+        q, k, v = L._qkv(lp["attn"], ac, h, positions)
+        n_rep = ac.n_heads // ac.n_kv_heads
+        k, v = L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep)
+        # flash only where there is no backward (prefill > 8192); training
+        # at 4k stays on the materialized path, bounded by microbatching —
+        # differentiating the online-softmax scan stores every chunk carry.
+        if x.shape[1] > (flags.FLASH_THRESHOLD or ac.flash_threshold):
+            out = L._sdpa_flash(q, k, v, positions, positions, window, ac.chunk_kv)
+        else:
+            out = L._sdpa_full(q, k, v, positions, positions, window)
+        attn_out = jnp.einsum("bqhk,hkd->bqd", out, lp["attn"]["wo"].astype(h.dtype))
+        ssd_out, _ = ssd_apply(lp["ssd"], c, h)
+        fused = (
+            lp["beta_attn"].astype(h.dtype) * L.rmsnorm(lp["attn_out_norm"], attn_out)
+            + lp["beta_ssd"].astype(h.dtype) * L.rmsnorm(lp["ssd_out_norm"], ssd_out)
+        ) * 0.5
+        x = x + fused
+        x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x), c.mlp_kind)
+        return x
+
+    def forward(self, params, tokens, prefix: Optional[jax.Array] = None):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], tokens, dt)
+        meta = jnp.broadcast_to(
+            params["meta"].astype(dt)[None], (x.shape[0],) + params["meta"].shape
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(dt), x], axis=1)
+        x = L.constrain_batch(x)  # concat w/ broadcast meta drops batch sharding
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)  # batch-free
+
+        layer = jax.checkpoint(self._fused_layer)  # per-layer remat
+
+        def body(carry, inp):
+            lp, window = inp
+            return layer(lp, window, carry, positions), None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], self._windows()), unroll=flags.UNROLL_LAYERS)
+        x = L.rmsnorm(params["final_norm"], x)
+        skip = c.n_meta_tokens + (prefix.shape[1] if prefix is not None else 0)
+        x = x[:, skip:, :]
+        return L.unembed(params["unembed"], x)
+
+    def loss(self, params, tokens, labels, prefix=None):
+        return lm_loss(self.forward(params, tokens, prefix), labels)
+
+    # ------------------------------------------------------------ decode --
+    def cache_spec(self, batch: int, max_len: int, codec: L.KVCodecConfig) -> dict:
+        c = self.cfg
+        h = c.ssm_heads or c.n_heads
+        win = min(max_len, (c.window or 1024) + c.n_meta_tokens)
+        attn_cache = L.cache_spec(c.attn(), batch, max_len, codec)
+        out = {
+            "attn_" + k: jax.ShapeDtypeStruct((c.n_layers,) + v.shape, v.dtype)
+            for k, v in attn_cache.items()
+        }
+        out["ssd_state"] = jax.ShapeDtypeStruct(
+            (c.n_layers, batch, h, c.ssm_state, c.d_model // h), jnp.float32
+        )
+        del win
+        return out
+
+    def init_cache(self, batch: int, max_len: int, codec: L.KVCodecConfig) -> dict:
+        return {k: jnp.zeros(s.shape, s.dtype)
+                for k, s in self.cache_spec(batch, max_len, codec).items()}
+
+    def decode_step(self, params, cache, token, index, codec: L.KVCodecConfig):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], token[:, None], dt)
+        windows = self._windows()
+
+        attn_keys = [k for k in cache if k.startswith("attn_")]
+        n_heads = c.ssm_heads or c.n_heads
+
+        def body(carry, inp):
+            lp, window, layer_cache = inp
+            x = carry
+            h = L.rmsnorm(lp["norm"], x)
+            ac = L.AttnConfig(
+                d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+                head_dim=c.hd, rope_theta=c.rope_theta, window=None,
+            )
+            acache = {k[5:]: v for k, v in layer_cache.items() if k.startswith("attn_")}
+            pos = index[None] if index.ndim == 0 else index  # (1,) batch-free
+            q, k_new, v_new = L._qkv(lp["attn"], ac, h, pos)
+            acache = L.cache_update(acache, codec, k_new, v_new, index)
+            kk, vv = L.cache_read(acache, codec, h.dtype)
+            n_rep = ac.n_heads // ac.n_kv_heads
+            kk, vv = L._repeat_kv(kk, n_rep), L._repeat_kv(vv, n_rep)
+            kpos = jnp.arange(kk.shape[1], dtype=jnp.int32)[None, :]
+            logits = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * ac.head_dim**-0.5
+            mask = (kpos <= index) & (kpos > index - window)
+            logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(h.dtype)
+            a_out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+            a_out = jnp.einsum("bqhk,hkd->bqd", a_out, lp["attn"]["wo"].astype(h.dtype))
+
+            sp = lp["ssd"]
+            n = c.ssm_state
+            xh = jnp.einsum("bsd,dhp->bshp", h, sp["w_in"].astype(dt))[:, 0]
+            bc = jnp.einsum("bsd,dhm->bshm", h, sp["w_bc"].astype(dt)).astype(jnp.float32)[:, 0]
+            Bm, Cm = bc[..., :n], bc[..., n:]
+            dtv = jax.nn.softplus(
+                jnp.einsum("bsd,dh->bsh", h, sp["w_dt"].astype(dt)).astype(jnp.float32)[:, 0]
+                + sp["dt_bias"].astype(jnp.float32)
+            )
+            a = -jnp.exp(sp["a_log"].astype(jnp.float32))
+            y, S_new = ssd_step(xh.astype(jnp.float32), Bm, Cm, dtv, a, layer_cache["ssd_state"])
+            y = y.astype(dt) + xh * sp["skip"].astype(dt)[None]
+            s_out = jnp.einsum("bhp,hpd->bd", y, sp["w_out"].astype(dt))[:, None]
+
+            fused = (
+                lp["beta_attn"].astype(dt) * L.rmsnorm(lp["attn_out_norm"], a_out)
+                + lp["beta_ssd"].astype(dt) * L.rmsnorm(lp["ssd_out_norm"], s_out)
+            ) * 0.5
+            x = x + fused
+            x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x), c.mlp_kind)
+            new_cache = {"attn_" + k: v for k, v in acache.items()}
+            new_cache["ssd_state"] = S_new
+            return x, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], windows, cache))
+        x = L.rmsnorm(params["final_norm"], x)
+        return L.unembed(params["unembed"], x)[:, 0, :], new_cache

@@ -1,0 +1,375 @@
+"""Shared model layers: norms, RoPE, GQA attention (full / chunked-flash /
+sliding-window / cross), MLPs, embeddings, KV caches (with optional
+fixed-rate block-float compression — the paper's technique applied to
+inference state).
+
+All functions are pure; parameters arrive as pytrees built from
+``spec.P`` declarations. Logical sharding axes used here:
+  embed, mlp, heads, kv_heads, head_dim, vocab, experts, state, layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models.spec import P
+
+# ---------------------------------------------------------------- norms ----
+
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": P((d,), ("embed",), "ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"].astype(dt)
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": P((d,), ("embed",), "ones"), "bias": P((d,), ("embed",), "zeros")}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"].astype(dt) + p["bias"].astype(dt)
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D); positions: (S,) — positions are
+    deliberately batch-free so masks/rotations never carry a batch dim
+    (a batch-shaped mask makes GSPMD replicate attention logits)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]  # (1, S, 1, half)
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    return jnp.concatenate(
+        [(x1 * cos - x2 * sin).astype(dt), (x2 * cos + x1 * sin).astype(dt)], axis=-1
+    )
+
+
+# ------------------------------------------------------------ attention ----
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    window: Optional[int] = None  # sliding-window size (None = full)
+    chunk_kv: int = 2048  # flash-chunk size for long sequences
+    flash_threshold: int = 8192  # switch to chunked softmax above this
+
+
+def attention_spec(c: AttnConfig) -> dict:
+    s = {
+        "wq": P((c.d_model, c.n_heads, c.head_dim), ("embed", "heads", "head_dim")),
+        "wk": P((c.d_model, c.n_kv_heads, c.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": P((c.d_model, c.n_kv_heads, c.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": P((c.n_heads, c.head_dim, c.d_model), ("heads", "head_dim", "embed")),
+    }
+    if c.qkv_bias:
+        s["bq"] = P((c.n_heads, c.head_dim), ("heads", "head_dim"), "zeros")
+        s["bk"] = P((c.n_kv_heads, c.head_dim), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = P((c.n_kv_heads, c.head_dim), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def _qkv(p: dict, c: AttnConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if c.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if c.use_rope:
+        q = rope(q, positions, c.rope_theta)
+        k = rope(k, positions, c.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa_full(q, k, v, q_pos, k_pos, window, causal=True):
+    """Materialized-scores attention. q_pos: (Q,), k_pos: (S,) batch-free."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]  # (Q, S)
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+Q_CHUNK = 2048  # flash query-block size (bounds the f32 accumulator)
+
+
+def _sdpa_flash(q, k, v, q_pos, k_pos, window, chunk, causal=True):
+    """Online-softmax tiled over BOTH queries and KV (flash form).
+    q_pos: (Q,), k_pos: (S,) batch-free.
+
+    Query blocking matters as much as KV blocking: a KV-only scan carries a
+    (B, H, S_q, hd) f32 accumulator — 27 GiB at 32k — whereas per-q-block
+    accumulators are (B, H, Q_CHUNK, hd). This path is used where there is
+    no backward (prefill/decode); training sequences stay on the
+    materialized path under per-layer remat + microbatching (differentiating
+    through an online-softmax scan stores every chunk's carry).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    posp = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = kp.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = posp.reshape(n_chunks, chunk)
+    scale = hd**-0.5
+
+    def one_q_block(args):
+        qb, qpb = args  # (B, QC, H, D), (QC,)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            kb, vb, pb = inp
+            logits = jnp.einsum("bqhk,bshk->bhqs", qb, kb).astype(jnp.float32) * scale
+            mask = pb[None, :] <= qpb[:, None] if causal else pb[None, :] < jnp.iinfo(jnp.int32).max
+            if window is not None:
+                mask &= pb[None, :] > qpb[:, None] - window
+            logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", pexp, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        qc_len = qb.shape[1]
+        m0 = jnp.full((b, h, qc_len), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc_len), jnp.float32)
+        a0 = jnp.zeros((b, h, qc_len, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, QC, H, D)
+
+    if sq <= Q_CHUNK:
+        return one_q_block((q, q_pos))
+    nq = -(-sq // Q_CHUNK)
+    qpad = nq * Q_CHUNK - sq
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    qpp = jnp.pad(q_pos, (0, qpad), constant_values=-1)  # padded queries mask all
+    qblocks = qp.reshape(b, nq, Q_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    qposb = qpp.reshape(nq, Q_CHUNK)
+    outs = jax.lax.map(one_q_block, (qblocks, qposb))  # (nq, B, QC, H, D)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * Q_CHUNK, h, hd)
+    return out[:, :sq]
+
+
+def attention(p: dict, c: AttnConfig, x: jax.Array, positions: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    q, k, v = _qkv(p, c, x, positions)
+    n_rep = c.n_heads // c.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    if x.shape[1] > (flags.FLASH_THRESHOLD or c.flash_threshold):
+        out = _sdpa_flash(q, k, v, positions, positions, c.window, c.chunk_kv, causal)
+    else:
+        out = _sdpa_full(q, k, v, positions, positions, c.window, causal)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+
+
+# -------------------------------------------------- KV cache (+ codec) ----
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCodecConfig:
+    """Fixed-rate block-float KV compression (the paper's cuZFP fixed-rate
+    mode adapted to inference state): int8 codes + one f32 scale per
+    (token, kv_head) block => 8.25 effective bits/value vs 16 (bf16),
+    halving KV HBM traffic & capacity. `none` disables."""
+
+    mode: str = "none"  # none | blockfloat8
+
+
+def cache_spec(c: AttnConfig, batch: int, max_len: int, codec: KVCodecConfig,
+               dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    if codec.mode == "blockfloat8":
+        return {
+            "k_codes": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads, c.head_dim), jnp.int8),
+            "v_codes": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads, c.head_dim), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads), jnp.float32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads, c.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, c.n_kv_heads, c.head_dim), dtype),
+    }
+
+
+def init_cache(c: AttnConfig, batch: int, max_len: int, codec: KVCodecConfig,
+               dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    return {k: jnp.zeros(s.shape, s.dtype) for k, s in cache_spec(c, batch, max_len, codec, dtype).items()}
+
+
+def _bf8_encode(x: jax.Array):
+    """x: (b, s, h, d) -> int8 codes + per-(token,head) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    codes = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return codes, scale
+
+
+def _bf8_decode(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_update(cache: dict, codec: KVCodecConfig, k_new: jax.Array, v_new: jax.Array,
+                 index: jax.Array) -> dict:
+    """Write new K/V (b, t, h, d) at position ``index`` (decode: t == 1)."""
+    if codec.mode == "blockfloat8":
+        kc, ks = _bf8_encode(k_new)
+        vc, vs = _bf8_encode(v_new)
+        return {
+            "k_codes": jax.lax.dynamic_update_slice_in_dim(cache["k_codes"], kc, index, 1),
+            "v_codes": jax.lax.dynamic_update_slice_in_dim(cache["v_codes"], vc, index, 1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, index, 1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, index, 1),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), index, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), index, 1),
+    }
+
+
+def cache_read(cache: dict, codec: KVCodecConfig, dtype=jnp.bfloat16):
+    if codec.mode == "blockfloat8":
+        k = _bf8_decode(cache["k_codes"], cache["k_scale"], dtype)
+        v = _bf8_decode(cache["v_codes"], cache["v_scale"], dtype)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+def decode_attention(p: dict, c: AttnConfig, x: jax.Array, cache: dict,
+                     codec: KVCodecConfig, index: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token attention against the cache. x: (b, 1, d)."""
+    positions = index[None] if index.ndim == 0 else index  # (1,)
+    q, k_new, v_new = _qkv(p, c, x, positions)
+    cache = cache_update(cache, codec, k_new, v_new, index)
+    k, v = cache_read(cache, codec, x.dtype)
+    n_rep = c.n_heads // c.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    max_len = k.shape[1]
+    k_pos = jnp.arange(max_len, dtype=jnp.int32)
+    if max_len > (flags.FLASH_THRESHOLD or c.flash_threshold):
+        out = _sdpa_flash(q, k, v, positions, k_pos, c.window, c.chunk_kv)
+    else:
+        out = _sdpa_full(q, k, v, positions, k_pos, c.window)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+# ------------------------------------------------------------------ MLP ----
+
+
+def mlp_spec(d_model: int, d_ff: int, kind: str = "swiglu") -> dict:
+    if kind == "swiglu":
+        return {
+            "gate": P((d_model, d_ff), ("embed", "mlp")),
+            "up": P((d_model, d_ff), ("embed", "mlp")),
+            "down": P((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {  # gelu
+        "up": P((d_model, d_ff), ("embed", "mlp")),
+        "up_b": P((d_ff,), ("mlp",), "zeros"),
+        "down": P((d_ff, d_model), ("mlp", "embed")),
+        "down_b": P((d_model,), ("embed",), "zeros"),
+    }
+
+
+def mlp(p: dict, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    dt = x.dtype
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["up"].astype(dt))
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["down"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["up"].astype(dt)) + p["up_b"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(dt)) + p["down_b"].astype(dt)
+
+
+# ------------------------------------------------------------ embedding ----
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Re-pin batch (dim 0) sharding on activations. Embedding gathers from a
+    vocab-sharded table make GSPMD drop the batch sharding of the residual
+    stream, which replicates *all* downstream attention — this constraint is
+    the fix. No-op outside a mesh context or when batch doesn't divide."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    # only constrain over axes still under GSPMD control — inside a
+    # partial-manual shard_map (e.g. the compressed-gradient pod hop) the
+    # manual axes must not appear in sharding constraints
+    auto = {
+        name for name, t in zip(mesh.axis_names, mesh.axis_types)
+        if t == jax.sharding.AxisType.Auto
+    }
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape and a in auto)
+    if not axes:
+        return x
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if size <= 1 or x.shape[0] % size != 0:
+        return x
+    first = axes if len(axes) > 1 else axes[0]
+    from jax.sharding import PartitionSpec as _PS
+
+    return jax.lax.with_sharding_constraint(
+        x, _PS(first, *([None] * (x.ndim - 1))))
+
+
+def embedding_spec(vocab: int, d_model: int) -> dict:
+    # std 0.02 (llama/gpt convention) — also keeps *tied* unembed logits
+    # calibrated so init loss ~ ln(vocab)
+    return {"table": P((vocab, d_model), ("vocab", "embed"), "small")}
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return constrain_batch(p["table"].astype(dtype)[tokens])
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts decoder (qwen3-moe, phi3.5-moe).
+
+Dispatch is the TPU-standard *sort-based* scheme (no dynamic shapes, no
+megablocks): flatten tokens, top-k route, sort assignments by expert, place
+into a capacity-padded (E, C, d) buffer with scatter, run all experts as one
+batched einsum (the "experts" axis shards over the model/expert-parallel
+mesh axis), and scatter-add the weighted outputs back. Tokens over capacity
+are dropped (standard Switch/GShard semantics; capacity_factor 1.25).
+
+Load-balance aux loss (Switch: E * sum_e f_e * p_e) is returned alongside
+logits and added by ``loss``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.spec import P
+from repro.models.transformer import DenseLM, lm_loss, stack_specs
+
+
+def _constrain_experts(x: jax.Array) -> jax.Array:
+    """Shard dim 0 (experts) over the EP/model axis when divisible."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return x
+    auto = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
+            if t == jax.sharding.AxisType.Auto}
+    tp = mesh.shape["model"]
+    if "model" not in auto or tp <= 1 or x.shape[0] % tp != 0:
+        return x
+    from jax.sharding import PartitionSpec as _PS
+
+    return jax.lax.with_sharding_constraint(
+        x, _PS("model", *([None] * (x.ndim - 1))))
+
+
+def moe_spec(c: ArchConfig) -> dict:
+    return {
+        "router": P((c.d_model, c.n_experts), ("embed", "experts"), "small"),
+        "gate": P((c.n_experts, c.d_model, c.d_ff), ("experts", "embed", "mlp")),
+        "up": P((c.n_experts, c.d_model, c.d_ff), ("experts", "embed", "mlp")),
+        "down": P((c.n_experts, c.d_ff, c.d_model), ("experts", "mlp", "embed")),
+    }
+
+
+def moe_apply(p: dict, c: ArchConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    n = b * s
+    k = c.top_k
+    e = c.n_experts
+    dt = x.dtype
+    xf = x.reshape(n, d)
+
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (N, k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: fraction routed vs mean prob per expert
+    f = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(f * probs.mean(0))
+
+    capacity = int(max(1, round(k * n / e * c.capacity_factor)))
+    eid = top_e.reshape(-1)  # (N*k,)
+    tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    gat = gates.reshape(-1).astype(dt)
+
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, gat_s = eid[order], tok[order], gat[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(eid_s), eid_s, num_segments=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k, dtype=jnp.int32) - starts[eid_s]
+    valid = rank < capacity
+    slot = jnp.where(valid, eid_s * capacity + rank, e * capacity)  # OOB => dropped
+
+    buf = jnp.zeros((e * capacity, d), dt).at[slot].set(xf[tok_s], mode="drop")
+    # §Perf note (refuted hypothesis, kept for the record): forcing the
+    # dispatch buffer onto the expert axis via with_sharding_constraint
+    # (_constrain_experts) made things WORSE (temp 10 -> 115 GiB): the
+    # token->expert scatter then needs an all-to-all GSPMD implements by
+    # replication. Letting sharding propagate from the einsums is better;
+    # a true a2a dispatch needs a shard_map rewrite (future hillclimb).
+    h = buf.reshape(e, capacity, d)
+    g = jnp.einsum("ecd,edf->ecf", h, p["gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", h, p["up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["down"].astype(dt))
+    y = y.reshape(e * capacity, d)
+
+    contrib = jnp.where(valid[:, None], y[jnp.clip(slot, 0, e * capacity - 1)] * gat_s[:, None], 0)
+    out = jnp.zeros((n, d), dt).at[tok_s].add(contrib)
+    return out.reshape(b, s, d), aux
+
+
+class MoELM(DenseLM):
+    """DenseLM with the MLP replaced by a routed expert layer."""
+
+    def layer_spec(self) -> dict:
+        c = self.cfg
+        return {
+            "attn_norm": self.norm_spec(c.d_model),
+            "attn": L.attention_spec(c.attn()),
+            "mlp_norm": self.norm_spec(c.d_model),
+            "moe": moe_spec(c),
+        }
+
+    def _layer_with_aux(self, p: dict, x: jax.Array, positions: jax.Array):
+        c = self.cfg
+        x = x + L.attention(p["attn"], c.attn(), self.norm(p["attn_norm"], x), positions)
+        y, aux = moe_apply(p["moe"], c, self.norm(p["mlp_norm"], x))
+        return x + y, aux
+
+    def forward_with_aux(self, params: dict, tokens: jax.Array,
+                         prefix: Optional[jax.Array] = None):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], tokens, dt)
+        if prefix is not None:
+            x = L.constrain_batch(jnp.concatenate([prefix.astype(dt), x], axis=1))
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)  # batch-free
+
+        layer = jax.checkpoint(self._layer_with_aux)  # per-layer remat
+
+        def body(carry, layer_params):
+            x, aux = layer(layer_params, carry, positions)
+            return x, aux
+
+        x, auxes = jax.lax.scan(body, x, params["layers"], unroll=flags.UNROLL_LAYERS)
+        x = self.norm(params["final_norm"], x)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:, :]
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        return L.unembed(table, x), auxes.mean()
+
+    def forward(self, params, tokens, prefix=None):
+        return self.forward_with_aux(params, tokens, prefix)[0]
+
+    def loss(self, params: dict, tokens: jax.Array, labels: jax.Array,
+             prefix: Optional[jax.Array] = None, aux_weight: float = 0.01) -> jax.Array:
+        logits, aux = self.forward_with_aux(params, tokens, prefix)
+        return lm_loss(logits, labels) + aux_weight * aux
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    index: jax.Array, codec: L.KVCodecConfig):
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], token[:, None], dt)
+
+        def body(carry, inp):
+            layer_params, layer_cache = inp
+            x = carry
+            h = self.norm(layer_params["attn_norm"], x)
+            a, layer_cache = L.decode_attention(
+                layer_params["attn"], c.attn(), h, layer_cache, codec, index
+            )
+            x = x + a
+            y, _ = moe_apply(layer_params["moe"], c, self.norm(layer_params["mlp_norm"], x))
+            return x + y, layer_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = self.norm(params["final_norm"], x)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        return L.unembed(table, x)[:, 0, :], new_cache

@@ -1,0 +1,31 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, the minicpm
+trait) — pure functions of the step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> sharp exponential decay (arXiv:2404.06395)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = decay_frac * total_steps
+    decay_start = total_steps - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0, 1)
+    dec = peak_lr * jnp.power(final_frac, t)
+    out = jnp.where(step < warmup_steps, warm, peak_lr)
+    return jnp.where(step > decay_start, dec, out)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

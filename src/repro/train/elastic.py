@@ -1,0 +1,56 @@
+"""Elastic scaling: rebuild the mesh after node loss and re-shard state.
+
+On a real fleet the control plane detects dead hosts (missed heartbeats),
+drains the slice, and relaunches with the surviving topology; the trainer's
+job is only to (a) pick a coherent smaller mesh and (b) re-shard the last
+checkpoint onto it. Both are pure functions and tested on CPU meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.dist import sharding as shd
+
+
+def degraded_mesh_shape(old: dict[str, int], lost_pods: int = 0,
+                        lost_data_rows: int = 0) -> dict[str, int]:
+    """Shrink the mesh along fault domains. Pods are the natural failure
+    unit (a DCN partition); within a pod we drop whole data rows so the
+    model axis (which carries TP collectives) stays intact."""
+    new = dict(old)
+    if "pod" in new and lost_pods:
+        if lost_pods >= new["pod"]:
+            raise ValueError("cannot lose every pod")
+        new["pod"] -= lost_pods
+    if lost_data_rows:
+        if lost_data_rows >= new["data"]:
+            raise ValueError("cannot lose every data row")
+        new["data"] -= lost_data_rows
+    return new
+
+
+def make_degraded_mesh(shape: dict[str, int]) -> jax.sharding.Mesh:
+    axes = tuple(shape.keys())
+    return jax.make_mesh(tuple(shape.values()), axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def reshard_state(state: Any, model, new_mesh: jax.sharding.Mesh,
+                  rules=shd.DEFAULT_RULES, step_cfg=None) -> Any:
+    """Re-shard a (restored) train state onto a different mesh."""
+    from repro.train import step as step_lib
+
+    cfg = step_cfg or step_lib.TrainStepConfig()
+    _, shardings = step_lib.make_state_specs(model, new_mesh, rules, cfg)
+    return jax.device_put(state, shardings)
+
+
+def rebalance_batch(global_batch: int, new_mesh: jax.sharding.Mesh) -> int:
+    """Largest batch <= global_batch divisible by the new data-parallel
+    extent (keeps per-step token budget as close as possible)."""
+    dp = new_mesh.shape.get("pod", 1) * new_mesh.shape.get("data", 1)
+    return max(dp, (global_batch // dp) * dp)

@@ -1,0 +1,108 @@
+"""Fault-tolerant training loop.
+
+Posture for 1000+ nodes (mechanisms all exercised by tests on CPU):
+  * resume-from-step: data pipeline is a pure function of step, checkpoint
+    carries (step, rng, data seed) — restart is exact, no dup/skip batches;
+  * preemption safety: SIGTERM/SIGINT triggers save-then-exit at the next
+    step boundary;
+  * straggler mitigation: per-step wall-clock deadline; steps that exceed it
+    are logged (on real fleets this feeds the scheduler's replace-node
+    logic; here it feeds metrics + tests);
+  * heartbeat file: external watchdogs detect a hung trainer by mtime;
+  * NaN circuit breaker: non-finite loss aborts before corrupting the
+    checkpoint chain (the last good checkpoint stays adoptable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.tokens import TokenPipeline
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 100
+    log_every: int = 10
+    step_deadline_s: float = 600.0  # straggler threshold
+    heartbeat_path: Optional[str] = None
+    abort_on_nan: bool = True
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    losses: list
+    stragglers: list
+    preempted: bool
+    nan_abort: bool
+
+
+def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
+        ckpt: CheckpointManager, cfg: LoopConfig,
+        put_batch: Optional[Callable] = None,
+        start_step: Optional[int] = None,
+        extra_batch: Optional[dict] = None) -> tuple[Any, LoopResult]:
+    """Run until total_steps, resuming from the checkpoint chain."""
+    preempted = {"flag": False}
+
+    def _on_signal(signum, frame):  # noqa: ARG001
+        preempted["flag"] = True
+
+    old_term = signal.signal(signal.SIGTERM, _on_signal)
+    old_int = signal.signal(signal.SIGINT, _on_signal)
+
+    if start_step is None:
+        latest = ckpt.latest_step()
+        start_step = 0 if latest is None else latest
+        if latest is not None:
+            state, extra = ckpt.restore(latest, state_like=state)
+
+    losses: list[float] = []
+    stragglers: list[int] = []
+    nan_abort = False
+    step = start_step
+    hb = Path(cfg.heartbeat_path) if cfg.heartbeat_path else None
+
+    try:
+        while step < cfg.total_steps:
+            t0 = time.time()
+            batch = pipeline.batch_at(step)
+            if extra_batch:
+                batch = {**batch, **extra_batch}
+            if put_batch is not None:
+                batch = put_batch(batch)
+            state, metrics = train_step(state, batch)
+            loss = float(jax.block_until_ready(metrics["loss"]))
+            dt = time.time() - t0
+            if not np.isfinite(loss):
+                nan_abort = True
+                if cfg.abort_on_nan:
+                    break
+            losses.append(loss)
+            if dt > cfg.step_deadline_s:
+                stragglers.append(step)
+            if hb is not None:
+                hb.write_text(json.dumps({"step": step, "t": time.time(), "loss": loss}))
+            step += 1
+            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                ckpt.save(step, state, extra={"data_step": step})
+            if preempted["flag"]:
+                ckpt.save(step, state, extra={"data_step": step, "preempted": True})
+                break
+    finally:
+        ckpt.wait()
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+
+    return state, LoopResult(step, losses, stragglers, preempted["flag"], nan_abort)

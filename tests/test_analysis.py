@@ -1,0 +1,154 @@
+"""Cosmology analysis metrics: power spectrum, FoF halos, distortion."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import halos, metrics, spectrum
+from repro.data import cosmo
+
+
+@pytest.fixture(scope="module")
+def nyx():
+    return cosmo.nyx_fields(n=32)
+
+
+@pytest.fixture(scope="module")
+def snap():
+    return cosmo.hacc_particles(grid=32)
+
+
+class TestSpectrum:
+    def test_self_ratio_is_one(self, nyx):
+        ok, dev = spectrum.pk_gate(nyx["vx"], nyx["vx"].copy())
+        assert ok and dev == 0.0
+
+    def test_power_law_slope_recovered(self):
+        f = cosmo._grf(64, -2.4, seed=0)
+        ps = spectrum.power_spectrum(f)
+        sl = np.polyfit(np.log(ps.k[2:20]), np.log(ps.pk[2:20]), 1)[0]
+        assert -3.2 < sl < -1.8
+
+    def test_small_noise_passes_large_noise_fails(self, nyx):
+        f = nyx["baryon_density"]
+        rng = np.random.default_rng(0)
+        tiny = f + rng.normal(scale=1e-5 * f.std(), size=f.shape).astype(np.float32)
+        ok_t, _ = spectrum.pk_gate(f, tiny)
+        big = f + rng.normal(scale=1.0 * f.std(), size=f.shape).astype(np.float32)
+        ok_b, dev_b = spectrum.pk_gate(f, big)
+        assert ok_t and not ok_b and dev_b > 0.01
+
+    def test_composite_fields(self, nyx):
+        vm = spectrum.velocity_magnitude(nyx["vx"], nyx["vy"], nyx["vz"])
+        assert vm.min() >= 0
+        od = spectrum.overall_density(nyx["baryon_density"], nyx["dark_matter_density"])
+        assert od.shape == nyx["baryon_density"].shape
+
+    def test_parseval_partial_power(self):
+        """Binned |k| <= Nyquist power is a (large) subset of the variance —
+        corner modes up to sqrt(3) x Nyquist are outside the spherical cut."""
+        f = cosmo._grf(32, -2.0, seed=1)
+        ps = spectrum.power_spectrum(f, n_bins=32)
+        total = (ps.pk * ps.counts).sum() / f.size
+        assert 0.2 * f.var() < total <= f.var() * (1 + 1e-9)
+
+
+class TestHalos:
+    def test_finds_planted_halos(self, snap):
+        cat = halos.fof_halos(snap.positions(), snap.box)
+        assert cat.n_halos > 20
+        assert cat.sizes.max() > 100
+
+    def test_self_ratio_one(self, snap):
+        cat = halos.fof_halos(snap.positions(), snap.box)
+        _, ratio = halos.halo_count_ratio(cat, cat)
+        np.testing.assert_allclose(ratio, 1.0)
+
+    def test_small_perturbation_keeps_halos(self, snap):
+        """Paper Fig. 6: eb=0.005 on positions preserves the halo catalog."""
+        pos = snap.positions()
+        cat = halos.fof_halos(pos, snap.box)
+        rng = np.random.default_rng(1)
+        pos2 = (pos + rng.uniform(-0.005, 0.005, pos.shape)) % snap.box
+        cat2 = halos.fof_halos(pos2, snap.box)
+        ok, dev = halos.halo_gate(cat, cat2)
+        assert ok, f"dev={dev}"
+
+    def test_large_perturbation_breaks_small_halos(self, snap):
+        pos = snap.positions()
+        cat = halos.fof_halos(pos, snap.box)
+        rng = np.random.default_rng(1)
+        pos2 = (pos + rng.uniform(-0.4, 0.4, pos.shape)) % snap.box
+        cat2 = halos.fof_halos(pos2, snap.box)
+        ok, dev = halos.halo_gate(cat, cat2)
+        assert dev > 0.01
+
+    def test_union_find_two_clusters(self):
+        """Two separated blobs -> two components, never merged."""
+        rng = np.random.default_rng(0)
+        a = rng.normal(scale=0.1, size=(50, 3)) + 10
+        b = rng.normal(scale=0.1, size=(60, 3)) + 50
+        pos = np.concatenate([a, b])
+        cat = halos.fof_halos(pos, box=100.0, linking_length=1.0, min_members=10)
+        assert cat.n_halos == 2
+        assert sorted(cat.sizes.tolist()) == [50, 60]
+
+    def test_mcp_and_mbp(self):
+        rng = np.random.default_rng(2)
+        blob = rng.normal(scale=0.5, size=(80, 3)) + 30
+        blob[0] = 30.0  # dead center: should be most connected & most bound
+        cat = halos.fof_halos(blob, box=100.0, linking_length=2.0, min_members=10)
+        hid = cat.labels[0]
+        assert hid >= 0
+        mcp = halos.most_connected_particle(blob, cat, 100.0, hid)
+        mbp = halos.most_bound_particle(blob, cat, 100.0, hid)
+        center_dist = np.linalg.norm(blob - 30.0, axis=1)
+        assert center_dist[mcp] < np.median(center_dist)
+        assert center_dist[mbp] < np.median(center_dist)
+
+    def test_periodic_wraparound(self):
+        """A halo straddling the box edge is one component."""
+        rng = np.random.default_rng(3)
+        blob = rng.normal(scale=0.3, size=(40, 3))  # centered at origin
+        pos = blob % 100.0
+        cat = halos.fof_halos(pos, box=100.0, linking_length=1.5, min_members=10)
+        assert cat.n_halos == 1
+        assert cat.sizes[0] == 40
+
+
+class TestMetrics:
+    def test_psnr_identical_inf(self):
+        x = np.linspace(0, 1, 100).astype(np.float32)
+        d = metrics.distortion(x, x)
+        assert d.mse == 0.0
+
+    def test_psnr_known_value(self):
+        x = np.zeros(1000, np.float32)
+        x[0] = 1.0  # range 1
+        y = x + 0.01
+        d = metrics.distortion(x, y)
+        assert d.psnr == pytest.approx(40.0, abs=0.1)
+        assert d.max_abs_err == pytest.approx(0.01, rel=1e-5)
+
+    def test_bitrate_and_ratio(self):
+        assert metrics.bitrate(nbytes_compressed=4_000, n_values=8_000) == 4.0
+        assert metrics.compression_ratio(4_000, 8_000) == 8.0
+
+
+class TestData:
+    def test_nyx_ranges_match_table2(self, nyx):
+        for name, (lo, hi) in cosmo.NYX_RANGES.items():
+            f = nyx[name]
+            assert f.min() >= lo - 1e-3 and f.max() <= hi * (1 + 1e-6), name
+            assert f.dtype == np.float32
+
+    def test_hacc_ranges_match_table2(self, snap):
+        for name in ("x", "y", "z"):
+            assert snap.fields[name].min() >= 0 and snap.fields[name].max() <= 256
+        for name in ("vx", "vy", "vz"):
+            assert np.abs(snap.fields[name]).max() <= 1e4
+
+    def test_deterministic(self):
+        a = cosmo.nyx_fields(n=16, seed=9)
+        b = cosmo.nyx_fields(n=16, seed=9)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])

@@ -1,0 +1,111 @@
+"""Checkpoint manager: integrity, lossy codec bounds, async, GC, restore."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, CodecPolicy
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (64, 4100)),  # > 1 MiB => lossy eligible
+            "b": jnp.arange(7, dtype=jnp.float32),
+        },
+        "opt": {"step": jnp.int32(5)},
+    }
+
+
+def test_lossless_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    mgr.save(3, s)
+    out, extra = mgr.restore(state_like=s)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lossy_bounded_and_smaller(tmp_path):
+    pol = CodecPolicy(mode="sz_abs", eb=1e-3, min_bytes=1 << 16)
+    mgr = CheckpointManager(tmp_path, async_save=False, policy=pol)
+    s = _state()
+    mgr.save(1, s)
+    res = mgr.wait()
+    assert res.ratio > 1.2, f"lossy checkpoint should shrink, got {res.ratio}"
+    out, _ = mgr.restore(state_like=s)
+    w0, w1 = np.asarray(s["params"]["w"]), np.asarray(out["params"]["w"])
+    assert np.abs(w0 - w1).max() <= 1e-3 * (1 + 1e-5)
+    # small + integer leaves stay exact
+    np.testing.assert_array_equal(np.asarray(out["params"]["b"]),
+                                  np.asarray(s["params"]["b"]))
+    assert int(out["opt"]["step"]) == 5
+
+
+def test_pwrel_policy(tmp_path):
+    pol = CodecPolicy(mode="sz_pwrel", eb=1e-3, min_bytes=1 << 16)
+    mgr = CheckpointManager(tmp_path, async_save=False, policy=pol)
+    s = _state()
+    mgr.save(1, s)
+    out, _ = mgr.restore(state_like=s)
+    w0, w1 = np.asarray(s["params"]["w"]), np.asarray(out["params"]["w"])
+    nz = w0 != 0
+    assert np.abs(w1[nz] / w0[nz] - 1).max() <= 1e-3 * 1.05
+
+
+def test_corruption_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    mgr.save(1, s)
+    d = sorted(tmp_path.glob("step_*"))[0]
+    blob = d / "leaf_00000.bin"
+    raw = bytearray(blob.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        mgr.restore(state_like=s)
+
+
+def test_keep_last_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2, async_save=False)
+    s = _state()
+    for step in (1, 2, 3, 4):
+        mgr.save(step, s)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_000000003", "step_000000004"]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    s = _state()
+    mgr.save(7, s)
+    res = mgr.wait()
+    assert res is not None and res.step == 7
+    out, _ = mgr.restore(state_like=s)
+    np.testing.assert_array_equal(np.asarray(out["params"]["b"]),
+                                  np.asarray(s["params"]["b"]))
+
+
+def test_extra_metadata_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    mgr.save(9, s, extra={"data_step": 9, "note": "hello"})
+    _, extra = mgr.restore(state_like=s)
+    assert extra == {"data_step": 9, "note": "hello"}
+
+
+def test_bf16_leaves(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False,
+                            policy=CodecPolicy(mode="sz_abs", eb=1e-2, min_bytes=1 << 16))
+    s = {"w": jax.random.normal(jax.random.key(0), (512, 1024)).astype(jnp.bfloat16)}
+    mgr.save(1, s)
+    out, _ = mgr.restore(state_like=s)
+    assert out["w"].dtype == jnp.bfloat16
+    diff = np.abs(np.asarray(out["w"], np.float32) - np.asarray(s["w"], np.float32))
+    maxabs = np.abs(np.asarray(s["w"], np.float32)).max()
+    assert diff.max() <= 1e-2 + maxabs * 2.0**-8  # eb + bf16 half-ulp re-round

@@ -1,0 +1,69 @@
+"""Unit + property tests for the block-adaptive bit packer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitpack
+
+
+@pytest.mark.parametrize("n", [1, 5, 1023, 1024, 1025, 4096, 10_000])
+def test_roundtrip_sizes(n):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(-(2**20), 2**20, size=n).astype(np.int32)
+    p = bitpack.pack_codes(jnp.asarray(codes))
+    back = np.asarray(bitpack.unpack_codes(p))
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_zero_codes_cost_headers_only():
+    codes = jnp.zeros(4096, jnp.int32)
+    p = bitpack.pack_codes(codes)
+    n_blocks = 4096 // bitpack.BLOCK
+    assert int(p.total_bits) == n_blocks * 8  # width headers only
+
+
+def test_extreme_values():
+    codes = np.asarray([0, 1, -1, 2**30, -(2**30), (2**31) - 1, -(2**31)], np.int32)
+    p = bitpack.pack_codes(jnp.asarray(codes))
+    back = np.asarray(bitpack.unpack_codes(p))
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_bitlength_exact():
+    u = jnp.asarray([0, 1, 2, 3, 4, 255, 256, 2**31, 2**32 - 1], jnp.uint32)
+    expect = [0, 1, 2, 2, 3, 8, 9, 32, 32]
+    np.testing.assert_array_equal(np.asarray(bitpack.bitlength(u)), expect)
+
+
+def test_zigzag_order_preserving_magnitude():
+    v = jnp.asarray([-3, -2, -1, 0, 1, 2, 3], jnp.int32)
+    u = np.asarray(bitpack.zigzag(v))
+    assert (np.asarray(bitpack.unzigzag(jnp.asarray(u))) == np.asarray(v)).all()
+    assert u[3] == 0 and max(u) <= 6  # small magnitudes -> small codes
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1), min_size=1, max_size=3000),
+    st.sampled_from([64, 256, 1024]),
+)
+def test_roundtrip_property(vals, block):
+    codes = np.asarray(vals, np.int32)
+    p = bitpack.pack_codes(jnp.asarray(codes), block=block)
+    back = np.asarray(bitpack.unpack_codes(p, block=block))
+    np.testing.assert_array_equal(back, codes)
+    # accounting invariant: total_bits >= payload lower bound
+    assert int(p.total_bits) >= len(codes) // block * 8
+
+
+def test_storage_slicing_matches_accounting():
+    rng = np.random.default_rng(7)
+    codes = rng.integers(-100, 100, size=5000).astype(np.int32)
+    p = bitpack.pack_codes(jnp.asarray(codes))
+    store = bitpack.to_storage(p)
+    n_blocks = len(store["widths"])
+    payload_bits = int(p.total_bits) - n_blocks * 8
+    assert len(store["words"]) == (payload_bits + 31) // 32

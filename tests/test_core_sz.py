@@ -1,0 +1,115 @@
+"""TPU-SZ: the paper's error-bound contract, Lorenzo exactness, blocking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sz, transforms
+from repro.core.api import get_compressor
+
+
+def _smooth_field(shape, seed=0, scale=100.0):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=shape).astype(np.float32)
+    for ax in range(len(shape)):
+        f = np.cumsum(f, axis=ax)
+    return (f * scale / max(np.abs(f).max(), 1e-9)).astype(np.float32)
+
+
+def test_lorenzo_residual_reconstruct_exact_int():
+    rng = np.random.default_rng(0)
+    q = rng.integers(-(2**20), 2**20, size=(17, 9, 23)).astype(np.int32)
+    d = sz.lorenzo_residual(jnp.asarray(q))
+    back = np.asarray(sz.lorenzo_reconstruct(d))
+    np.testing.assert_array_equal(back, q)
+
+
+@pytest.mark.parametrize("shape", [(64,), (48, 48), (24, 24, 24)])
+@pytest.mark.parametrize("eb", [1e-1, 1e-3])
+def test_abs_error_bound_holds(shape, eb):
+    x = _smooth_field(shape)
+    c = sz.compress(jnp.asarray(x), eb)
+    xr = np.asarray(sz.decompress(c))
+    assert np.abs(xr - x).max() <= eb * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("block", [8, 16])
+def test_blocked_mode_bound_and_worse_cr(block):
+    """GPU-SZ style blocking keeps the bound but lowers CR (paper Fig. 4)."""
+    x = _smooth_field((32, 32, 32))
+    eb = 1e-2
+    cg = sz.compress(jnp.asarray(x), eb)
+    cb = sz.compress(jnp.asarray(x), eb, block_size=block)
+    xr = np.asarray(sz.decompress(cb))
+    assert np.abs(xr - x).max() <= eb * (1 + 1e-5)
+    assert float(sz.compression_ratio(cb)) <= float(sz.compression_ratio(cg)) * 1.05
+
+
+def test_smoother_data_compresses_better():
+    rough = np.asarray(np.random.default_rng(1).normal(size=(32, 32, 32)), np.float32)
+    smooth = _smooth_field((32, 32, 32), seed=1)
+    rough *= 100 / np.abs(rough).max()
+    cr_r = float(sz.compression_ratio(sz.compress(jnp.asarray(rough), 1e-2)))
+    cr_s = float(sz.compression_ratio(sz.compress(jnp.asarray(smooth), 1e-2)))
+    assert cr_s > cr_r
+
+
+def test_pw_rel_mode_relative_bound():
+    """PW_REL via log transform (paper §IV-B4 / Liang'18)."""
+    rng = np.random.default_rng(3)
+    x = np.asarray(rng.normal(size=4096) * np.exp(rng.uniform(0, 8, 4096)), np.float32)
+    x[::97] = 0.0  # exact zeros must survive
+    comp = get_compressor("tpu-sz")
+    for pw in (0.1, 0.01):
+        r = comp.compress(jnp.asarray(x), pw_rel=pw)
+        xr = np.asarray(comp.decompress(r))
+        nz = x != 0
+        rel = np.abs(xr[nz] / x[nz] - 1.0)
+        assert rel.max() <= pw * (1 + 0.05)
+        assert (xr[~nz] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=1e-4, max_value=1.0), st.integers(0, 10_000))
+def test_error_bound_property(eb, seed):
+    """Invariant: |x_hat - x| <= eb for arbitrary data & bound."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(rng.normal(size=(8, 8, 8)) * 50, np.float32)
+    c = sz.compress(jnp.asarray(x), eb)
+    xr = np.asarray(sz.decompress(c))
+    assert np.abs(xr - x).max() <= eb * (1 + 1e-5)
+
+
+def test_hacc_1d_roundtrip_through_3d_partitioning():
+    """Paper §IV-B4 dimension conversion: 1-D -> 3-D -> compress -> back."""
+    rng = np.random.default_rng(5)
+    n = 100_000
+    x = np.asarray(np.cumsum(rng.normal(size=n)) % 256, np.float32)
+    comp = get_compressor("tpu-sz")
+    r = comp.compress(jnp.asarray(x), eb=0.005)
+    xr = np.asarray(comp.decompress(r))
+    assert xr.shape == x.shape
+    assert np.abs(xr - x).max() <= 0.005 * (1 + 1e-5)
+    assert r.ratio > 1.0
+
+
+def test_compression_ratio_accounting():
+    x = _smooth_field((32, 32, 32))
+    c = sz.compress(jnp.asarray(x), 1e-2)
+    nbytes = int(sz.compressed_nbytes(c))
+    assert nbytes == (int(c.packed.total_bits) + 7) // 8
+    assert float(sz.compression_ratio(c)) == pytest.approx(x.size * 4 / nbytes, rel=1e-6)
+
+
+def test_jit_cache_stability():
+    """Same-shaped inputs reuse the compiled compressor (no retrace)."""
+    x1 = jnp.asarray(_smooth_field((16, 16, 16), seed=1))
+    x2 = jnp.asarray(_smooth_field((16, 16, 16), seed=2))
+    c1 = sz.compress(x1, 1e-2)
+    n0 = sz.compress._cache_size()
+    sz.compress(x2, 1e-2)
+    assert sz.compress._cache_size() == n0
+    assert c1.shape == (16, 16, 16)

@@ -1,0 +1,123 @@
+"""TPU-ZFP: lifting exactness, fixed-rate contract, embedded-coding quality."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import zfp
+from repro.core.api import get_compressor
+
+
+def _grf(n=32, slope=-2.2, seed=0, lo=0.0, hi=1e5):
+    rng = np.random.default_rng(seed)
+    kx = np.fft.fftfreq(n)[:, None, None] ** 2
+    ky = np.fft.fftfreq(n)[None, :, None] ** 2
+    kz = np.fft.rfftfreq(n)[None, None, :] ** 2
+    k = np.sqrt(kx + ky + kz)
+    k[0, 0, 0] = 1.0
+    spec = k ** (slope / 2.0)
+    f = np.fft.irfftn(np.fft.rfftn(rng.normal(size=(n, n, n))) * spec, s=(n, n, n), axes=(0, 1, 2))
+    f = (f - f.min()) / (f.max() - f.min())
+    return (lo + f * (hi - lo)).astype(np.float32)
+
+
+def test_lift_near_inverse():
+    """ZFP's classic lift is intentionally not bit-exact (the >>1 steps drop
+    low bits; zfp loses a few ulps even at max rate). 1-D roundoff <= 2."""
+    rng = np.random.default_rng(0)
+    v = rng.integers(-(2**27), 2**27, size=(5000, 4)).astype(np.int32)
+    out = np.asarray(zfp.inv_lift(zfp.fwd_lift(jnp.asarray(v))))
+    assert np.abs(out.astype(np.int64) - v).max() <= 2
+
+
+def test_lift3d_near_inverse():
+    """3-D composition of lifts: roundoff stays O(ulps) (<= 32 of 2^25)."""
+    rng = np.random.default_rng(1)
+    b = rng.integers(-(2**25), 2**25, size=(512, 4, 4, 4)).astype(np.int32)
+    out = np.asarray(zfp._inv_lift3d(zfp._lift3d(jnp.asarray(b))))
+    assert np.abs(out.astype(np.int64) - b).max() <= 32
+
+
+def test_transform_growth_within_int32():
+    """Q=25 guard bits: post-transform coefficients must stay in int32."""
+    rng = np.random.default_rng(2)
+    b = rng.integers(-(2**25), 2**25, size=(4096, 4, 4, 4)).astype(np.int32)
+    coef = np.asarray(zfp._lift3d(jnp.asarray(b)))
+    assert np.abs(coef.astype(np.int64)).max() < 2**30
+
+
+def test_negabinary_roundtrip():
+    v = jnp.asarray([0, 1, -1, 2**30, -(2**30), 2**31 - 1], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(zfp.inv_negabinary(zfp.negabinary(v))), np.asarray(v))
+
+
+def test_sequency_perm_is_permutation():
+    assert sorted(zfp.PERM.tolist()) == list(range(64))
+    degrees = [sum(divmod(p % 16, 4)) + p // 16 for p in zfp.PERM]  # i+j+k
+    assert degrees == sorted(degrees)
+
+
+@pytest.mark.parametrize("rate", [2, 4, 8, 16])
+def test_fixed_rate_is_exact(rate):
+    f = _grf(16)
+    c = zfp.compress(jnp.asarray(f), rate)
+    # every block consumes exactly rate*64 bits
+    assert zfp.compressed_nbytes(c) == c.words.shape[0] * rate * 8
+    assert zfp.compression_ratio(c) == pytest.approx(32.0 / rate, rel=0.05)
+
+
+def test_rate_distortion_monotone():
+    f = _grf(32)
+    last = -np.inf
+    for rate in (2, 4, 8, 16):
+        c = zfp.compress(jnp.asarray(f), rate)
+        fr = np.asarray(zfp.decompress(c))
+        mse = np.mean((fr - f) ** 2)
+        p = 20 * np.log10(f.max() - f.min()) - 10 * np.log10(max(mse, 1e-30))
+        assert p > last
+        last = p
+    assert last > 90  # rate 16 on a smooth field should be near-transparent
+
+
+def test_zero_block_handling():
+    f = np.zeros((8, 8, 8), np.float32)
+    c = zfp.compress(jnp.asarray(f), 4)
+    assert (np.asarray(c.emax) == 0).all()
+    np.testing.assert_array_equal(np.asarray(zfp.decompress(c)), f)
+
+
+def test_non_multiple_of_four_shapes():
+    f = _grf(32)[:30, :29, :27]
+    c = zfp.compress(jnp.asarray(f), 8)
+    fr = np.asarray(zfp.decompress(c))
+    assert fr.shape == f.shape
+    assert np.mean((fr - f) ** 2) < np.var(f) * 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]))
+def test_decode_error_bounded_by_plane_property(seed, rate):
+    """Worst-case truncation bound: every block keeps at least
+    ``(rate*64 - header) // 64`` full bit planes (a plane costs <= 64 bits),
+    so error <= maxabs * 2^(4 - kept) even for incompressible white noise
+    (2 planes of negabinary slack + 2^3 transform gain + roundoff)."""
+    rng = np.random.default_rng(seed)
+    f = np.asarray(rng.normal(size=(8, 8, 8)) * 10 ** rng.uniform(-3, 6), np.float32)
+    c = zfp.compress(jnp.asarray(f), rate)
+    fr = np.asarray(zfp.decompress(c))
+    kept = (rate * 64 - 58) // 64
+    maxabs = np.abs(f).max()
+    assert np.abs(fr - f).max() <= max(maxabs * 2.0 ** (4 - kept), 1e-30)
+
+
+def test_api_1d_and_2d_paths():
+    comp = get_compressor("tpu-zfp")
+    x1 = np.asarray(np.cumsum(np.random.default_rng(0).normal(size=5000)), np.float32)
+    r = comp.compress(jnp.asarray(x1), rate=8)
+    xr = np.asarray(comp.decompress(r))
+    assert xr.shape == x1.shape
+    x2 = _grf(16)[:, :, 0]
+    r2 = comp.compress(jnp.asarray(x2), rate=8)
+    assert np.asarray(comp.decompress(r2)).shape == x2.shape

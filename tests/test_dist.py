@@ -1,0 +1,100 @@
+"""Distribution substrate: logical-axis rules, divisibility fallbacks,
+collective-bytes HLO parsing, schedules, wire-byte accounting."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.dist import collectives, sharding
+from repro.launch.dryrun import collective_bytes
+from repro.optim import schedules
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class TestSpecFor:
+    def _mesh(self, shape, axes):
+        # abstract meshes avoid needing real devices for spec math
+        return jax.sharding.AbstractMesh(shape, axes)
+
+    def test_basic_mapping(self):
+        m = self._mesh((16, 16), ("data", "model"))
+        spec = sharding.spec_for((8192, 49152), ("embed", "mlp"), m)
+        assert spec == PS("data", "model")
+
+    def test_divisibility_fallback(self):
+        m = self._mesh((16, 16), ("data", "model"))
+        # starcoder2: 24 heads don't divide 16 -> replicate that dim
+        spec = sharding.spec_for((3072, 24, 128), ("embed", "heads", "head_dim"), m)
+        assert spec == PS("data")
+
+    def test_no_axis_reuse_in_one_array(self):
+        m = self._mesh((16, 16), ("data", "model"))
+        # experts and mlp both want "model": left-most wins, other replicates
+        spec = sharding.spec_for((128, 2048, 768), ("experts", "embed", "mlp"), m)
+        assert spec == PS("model", "data")
+
+    def test_batch_axes_compose(self):
+        m = self._mesh((2, 16, 16), ("pod", "data", "model"))
+        spec = sharding.spec_for((256, 4096), ("batch", "seq"), m)
+        assert spec == PS(("pod", "data"))
+
+    def test_missing_mesh_axis_ignored(self):
+        m = self._mesh((4,), ("data",))
+        spec = sharding.spec_for((1024, 4096), ("embed", "mlp"), m)
+        assert spec == PS("data")  # "model" absent -> mlp replicated
+
+
+class TestCollectiveParse:
+    HLO = """
+  %ag = bf16[80,512,3072]{2,1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = (f32[256]{0}, f32[256]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = s8[65536,128]{1,0} all-to-all(%codes), dimensions={0}
+  %cp = bf16[4,4096]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%l, %r)
+"""
+
+    def test_sums_result_bytes_per_op(self):
+        out = collective_bytes(self.HLO)
+        assert out["all-gather"] == 80 * 512 * 3072 * 2
+        assert out["all-reduce"] == 1024 * 4
+        assert out["reduce-scatter"] == 2 * 256 * 4  # tuple result
+        assert out["all-to-all"] == 65536 * 128
+        assert out["collective-permute"] == 4 * 4096 * 2
+
+    def test_ignores_compute_ops(self):
+        out = collective_bytes("%dot = f32[4096,4096]{1,0} dot(%a, %b)")
+        assert sum(out.values()) == 0
+
+
+class TestSchedules:
+    def test_cosine_shape(self):
+        lr0 = float(schedules.cosine(0, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        lrp = float(schedules.cosine(10, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        lre = float(schedules.cosine(100, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        assert lr0 == 0.0 and lrp == pytest.approx(1.0) and lre == pytest.approx(0.1, rel=0.01)
+
+    def test_wsd_plateau_then_decay(self):
+        kw = dict(peak_lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(schedules.wsd(50, **kw)) == pytest.approx(1.0)
+        assert float(schedules.wsd(89, **kw)) == pytest.approx(1.0)
+        lr_end = float(schedules.wsd(100, **kw))
+        assert lr_end == pytest.approx(0.01, rel=0.05)  # sharp final decay
+
+
+class TestElasticHelpers:
+    def test_degraded_shapes(self):
+        from repro.train import elastic
+
+        assert elastic.degraded_mesh_shape({"pod": 2, "data": 16, "model": 16},
+                                           lost_pods=1) == {"pod": 1, "data": 16, "model": 16}
+        assert elastic.degraded_mesh_shape({"data": 16, "model": 16},
+                                           lost_data_rows=4) == {"data": 12, "model": 16}
+        with pytest.raises(ValueError):
+            elastic.degraded_mesh_shape({"pod": 2, "data": 16, "model": 16}, lost_pods=2)

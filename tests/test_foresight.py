@@ -1,0 +1,118 @@
+"""Foresight framework: CBench sweeps, PAT workflows (local + SLURM script
+generation), Cinema database, §V-D guideline behaviour."""
+
+import json
+import subprocess
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.data import cosmo
+from repro.foresight import cbench, cinema, guideline, pat
+
+
+@pytest.fixture(scope="module")
+def nyx_small():
+    return cosmo.nyx_fields(n=32)
+
+
+class TestCBench:
+    def test_sweep_runs_and_reports(self, nyx_small):
+        spec = {"cases": [{
+            "compressor": "tpu-sz",
+            "fields": ["baryon_density"],
+            "configs": [{"eb": 200.0}, {"eb": 20.0}],
+        }, {
+            "compressor": "tpu-zfp",
+            "fields": ["baryon_density"],
+            "configs": [{"rate": 8}],
+        }]}
+        res = cbench.run_sweep(spec, nyx_small)
+        assert len(res) == 3
+        sz_loose, sz_tight, zfp8 = res
+        assert sz_loose.ratio > sz_tight.ratio  # looser bound -> higher CR
+        assert sz_tight.psnr > sz_loose.psnr
+        assert zfp8.ratio == pytest.approx(4.0, rel=0.05)
+        assert all(r.throughput_c_mbs > 0 for r in res)
+
+    def test_results_serializable(self, nyx_small, tmp_path):
+        res = [cbench.run_case("tpu-sz", "vx", nyx_small["vx"], {"eb": 1e5})]
+        cbench.save_results(res, tmp_path / "r.json")
+        rows = json.loads((tmp_path / "r.json").read_text())
+        assert rows[0]["compressor"] == "tpu-sz" and "psnr" in rows[0]
+
+
+class TestPAT:
+    def test_local_execution_with_dependencies(self):
+        wf = pat.Workflow("demo")
+        wf.add(pat.Job("gen", fn=lambda: 21))
+        wf.add(pat.Job("double", fn=lambda gen: gen * 2, depends_on=["gen"]))
+        out = wf.run_local()
+        assert out["double"] == 42
+
+    def test_cycle_detection(self):
+        wf = pat.Workflow("bad")
+        wf.add(pat.Job("a", fn=lambda: 1))
+        wf.jobs["a"].depends_on.append("a")
+        with pytest.raises(ValueError):
+            wf.run_local()
+
+    def test_unknown_dependency_rejected(self):
+        wf = pat.Workflow("w")
+        with pytest.raises(ValueError):
+            wf.add(pat.Job("x", fn=lambda: 0, depends_on=["nope"]))
+
+    def test_slurm_script_generation(self, tmp_path):
+        wf = pat.Workflow("cosmo")
+        wf.add(pat.Job("cbench", command="python -m benchmarks.rate_distortion", nodes=1))
+        wf.add(pat.Job("spectra", command="python -m benchmarks.power_spectrum",
+                       depends_on=["cbench"], nodes=2, time_limit="02:00:00"))
+        script = wf.write_submission_script(tmp_path / "submit.sh")
+        text = script.read_text()
+        assert "sbatch --parsable" in text
+        sub = (tmp_path / "cosmo_jobs" / "spectra.sbatch").read_text()
+        assert "--dependency=afterok:${JOB_CBENCH}" in sub
+        assert "--nodes=2" in sub and "--time=02:00:00" in sub
+        # the driver must be valid bash
+        assert subprocess.run(["bash", "-n", str(script)]).returncode == 0
+
+
+class TestCinema:
+    def test_database_layout(self, tmp_path):
+        db = cinema.CinemaDatabase(tmp_path / "db")
+        db.add_case({"compressor": "tpu-sz", "field": "vx", "ratio": 5.0},
+                    curves={"pk_ratio": ([1, 2, 3], [1.0, 0.99, 1.01])})
+        db.add_case({"compressor": "tpu-zfp", "field": "vx", "ratio": 8.0})
+        idx = db.write()
+        lines = idx.read_text().strip().splitlines()
+        assert len(lines) == 3  # header + 2 rows
+        art = json.loads((tmp_path / "db" / "case_0000_pk_ratio.json").read_text())
+        assert art["y"][1] == 0.99
+
+
+class TestGuideline:
+    def test_picks_max_ratio_passing_config(self, nyx_small):
+        fields = {"baryon_density": nyx_small["baryon_density"]}
+        configs = [{"eb": 0.5}, {"eb": 50.0}, {"eb": 5000.0}]
+        fit = guideline.best_fit_per_field(fields, "tpu-sz", configs, pk_tol=0.01)
+        pick = fit.field_results["baryon_density"]
+        assert pick.passed
+        # of the passing set, it is the max-ratio one: every *other* passing
+        # config must not beat it
+        assert pick.ratio >= 1.0
+        assert fit.overall_ratio == pytest.approx(pick.ratio, rel=1e-6)
+
+    def test_gate_rejects_destructive_config(self, nyx_small):
+        f = nyx_small["baryon_density"]
+        ok, dev, _ = guideline.evaluate_gates(
+            {"d": f}, {"d": f + np.random.default_rng(0).normal(scale=f.std(), size=f.shape).astype(np.float32)})
+        assert not ok and dev > 0.01
+
+    def test_checkpoint_gate(self):
+        loss = lambda p: float(np.sum(p["w"] ** 2))
+        p = {"w": np.ones(10, np.float32)}
+        ok, delta = guideline.checkpoint_gate(loss, p, {"w": p["w"] * 1.00001}, tol=1e-3)
+        assert ok and delta < 1e-3
+        ok2, _ = guideline.checkpoint_gate(loss, p, {"w": p["w"] * 2}, tol=1e-3)
+        assert not ok2
