@@ -1,5 +1,5 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report. ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+report. ``PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]``.
 
 Sections:
   fig4  rate-distortion curves (PSNR vs bitrate), SZ + ZFP, Nyx + HACC
@@ -8,25 +8,74 @@ Sections:
   fig7-10  throughput: stage breakdown, modeled TPU kernels, rate scaling
   vd    §V-D guideline end-to-end (best-fit configs + overall CR)
   roofline  per (arch x shape x mesh) terms from the dry-run artifacts
+
+Every run writes a machine-readable MB/s record so the perf trajectory is
+tracked across PRs: only full-size runs write the committed
+``BENCH_throughput.json``; ``--smoke`` and ``--fast`` write the untracked
+``BENCH_throughput.<mode>.json`` so small-n numbers never overwrite — or
+get compared against — the canonical full-run record.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_throughput.json"
 
 
 def _section(title: str):
     print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
 
 
+def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
+                   mode: str = "full") -> dict:
+    """Figs 7-10 + the packer microbench; returns the json-serializable
+    record written by :func:`write_bench_json`."""
+    from benchmarks import throughput
+
+    record = {
+        "schema": "bench_throughput/v1",
+        "mode": "smoke" if smoke else mode,
+        "n": n,
+        "measured_breakdown": throughput.measured_breakdown(n=n),
+        "modeled_tpu": throughput.modeled_tpu_kernel_throughput(),
+        "packer": throughput.packer_microbench(n=1 << 18 if smoke else 1 << 22),
+    }
+    if not smoke:
+        record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
+    return record
+
+
+def write_bench_json(record: dict) -> None:
+    mode = record.get("mode", "full")
+    path = BENCH_JSON if mode == "full" else BENCH_JSON.with_suffix(f".{mode}.json")
+    path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    print(f"\nwrote {path}")
+
+
 def main() -> None:
     fast = "--fast" in sys.argv
-    n = 32 if fast else 64
+    smoke = "--smoke" in sys.argv
+    n = 32 if (fast or smoke) else 64
     t0 = time.time()
 
+    if smoke:
+        _section("Throughput smoke (measured CPU + modeled TPU)")
+        record = run_throughput(n=n, vs_bitrate_n=0, smoke=True)
+        for r in record["measured_breakdown"]:
+            print(r)
+        for r in record["modeled_tpu"]:
+            print(r)
+        print(record["packer"])
+        write_bench_json(record)
+        print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
+        return
+
     from benchmarks import (guideline_bench, halo_finder, power_spectrum,
-                            rate_distortion, roofline, throughput)
+                            rate_distortion, roofline)
 
     _section("Fig 4 — rate-distortion (PSNR vs bitrate)")
     print("table,compressor,field,config,bitrate,psnr_db,ratio")
@@ -49,12 +98,16 @@ def main() -> None:
         print(",".join(str(r[c]) for c in cols))
 
     _section("Figs 7-10 — throughput (measured CPU + modeled TPU)")
-    for r in throughput.measured_breakdown(n=n):
+    record = run_throughput(n=n, vs_bitrate_n=32 if fast else 48,
+                            mode="fast" if fast else "full")
+    for r in record["measured_breakdown"]:
         print(r)
-    for r in throughput.modeled_tpu_kernel_throughput():
+    for r in record["modeled_tpu"]:
         print(r)
-    for r in throughput.throughput_vs_bitrate(n=32 if fast else 48):
+    for r in record["throughput_vs_bitrate"]:
         print(r)
+    print(record["packer"])
+    write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")
     res = guideline_bench.run(n=n)

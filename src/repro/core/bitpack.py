@@ -3,15 +3,35 @@ warp-level Huffman stage.
 
 Huffman coding is branchy and serial; the TPU VPU wants uniform lane work.
 Quantization codes produced by the Lorenzo stage cluster tightly around zero,
-so a per-block fixed width (6-bit header per block) recovers most of the
+so a per-block fixed width (8-bit header per block) recovers most of the
 entropy-coding win while remaining fully vectorizable:
 
   * codes are zigzag-mapped to unsigned,
   * each block of ``BLOCK`` codes is packed at ``ceil(log2(max+1))`` bits,
-  * bit positions never collide, so packing is a scatter-OR (realised as a
-    scatter-add, which XLA fuses) over a worst-case-sized uint32 buffer,
+  * a code of width ``w <= 32`` starting at bit offset ``p`` spans at most
+    the two adjacent words ``p >> 5`` and ``(p >> 5) + 1``, so packing is
+    exactly **two** shift/OR scatter-adds (bit positions never collide, so
+    add == OR) over a worst-case-sized uint32 buffer, and unpacking is two
+    gathers — not one pass per bit,
   * the *actual* compressed size is ``total_bits`` — the storage layer slices
     the buffer before writing (device buffers must be static-shaped in JAX).
+
+Byte-traffic accounting (B/pt, worst-case-buffer writes included; ``br`` is
+the achieved bitrate in bits/value):
+
+  ========================  ==========================================
+  stage                     HBM traffic per point
+  ========================  ==========================================
+  pack: read codes          4 B
+  pack: 2 scatter-adds      2 x 4 B buffer write + 2 x 4 B read-modify
+  unpack: 2 gathers         ~2 x br/8 B read (compressed words)
+  unpack: write codes       4 B
+  ========================  ==========================================
+
+The seed implementation made **32** full-array scatter passes (one per bit);
+the word-level formulation above does the same work in 2, an O(16x)
+pass-count reduction.  The fused kernel path (``repro.kernels.sz_fused``)
+eliminates the intermediate int32 code array entirely — see that module.
 
 All arithmetic is int32/uint32; callers must keep ``n * 32 < 2**31`` per call
 (the top-level API chunks large fields into partitions, mirroring the paper's
@@ -70,6 +90,13 @@ def bitlength(u: jax.Array) -> jax.Array:
     return w + (v > 0).astype(jnp.int32)
 
 
+def code_mask(w: jax.Array) -> jax.Array:
+    """uint32 mask of the low ``w`` bits, exact for w in [0, 32]."""
+    w = w.astype(jnp.int32)
+    shift = (32 - jnp.maximum(w, 1)).astype(jnp.uint32)  # in [0, 31]
+    return jnp.where(w == 0, jnp.uint32(0), jnp.uint32(0xFFFFFFFF) >> shift)
+
+
 def _block_layout(n: int, block: int) -> tuple[int, int]:
     n_blocks = -(-n // block)
     padded = n_blocks * block
@@ -99,14 +126,22 @@ def pack_codes(codes: jax.Array, block: int = BLOCK) -> PackedCodes:
 
     capacity = n + 2  # worst case: 32 bits/code => n words; +2 slack
     buf = jnp.zeros((capacity,), jnp.uint32)
-    valid = jnp.arange(padded, dtype=jnp.int32) < n
-    for bit in range(32):
-        active = (bit < w_per) & valid
-        p = pos0 + bit
-        word = jnp.where(active, p >> 5, 0)
-        off = (p & 31).astype(jnp.uint32)
-        contrib = jnp.where(active, ((u >> bit) & 1) << off, jnp.uint32(0))
-        buf = buf.at[word].add(contrib, mode="drop")
+    # Word-level packing: code bits [pos0, pos0+w) span at most the two
+    # adjacent words pos0>>5 and (pos0>>5)+1.  Each code has bitlength <= its
+    # block width w (so u < 2**w), which makes the split exact with plain
+    # shifts: the low word takes u << (pos0 & 31) (uint32 truncation drops
+    # exactly the straddling bits), the high word takes the remainder.
+    # Padded codes (index >= n) have u == 0, so they contribute nothing and
+    # need no mask; their (possibly out-of-range) indices are dropped.
+    off = (pos0 & 31).astype(jnp.uint32)
+    word0 = pos0 >> 5
+    lo = u << off
+    # u >> (32 - off) for off in [0, 31]; the two-step shift keeps every
+    # shift amount in [0, 31] (single >>32 is undefined), and off == 0
+    # correctly yields 0 (the code fits entirely in word0).
+    hi = (u >> 1) >> (jnp.uint32(31) - off)
+    buf = buf.at[word0].add(lo, mode="drop")
+    buf = buf.at[word0 + 1].add(hi, mode="drop")
 
     total_bits = jnp.sum(block_bits) + jnp.int32(n_blocks * _WIDTH_BITS)
     return PackedCodes(buf, width.astype(jnp.uint8), total_bits, n)
@@ -126,15 +161,17 @@ def unpack_codes(packed: PackedCodes, block: int = BLOCK) -> jax.Array:
     w_per = width[blk]
     pos0 = base[blk] + idx_in_block * w_per
 
-    u = jnp.zeros((padded,), jnp.uint32)
+    # Word-level unpacking: two gathers (the lo/hi words every code spans)
+    # instead of one gather per bit.
     cap = packed.words.shape[0]
-    for bit in range(32):
-        active = bit < w_per
-        p = pos0 + bit
-        word = jnp.clip(p >> 5, 0, cap - 1)
-        off = (p & 31).astype(jnp.uint32)
-        bitval = (packed.words[word] >> off) & 1
-        u = u | jnp.where(active, bitval << bit, jnp.uint32(0))
+    off = (pos0 & 31).astype(jnp.uint32)
+    word0 = jnp.clip(pos0 >> 5, 0, cap - 1)
+    word1 = jnp.clip((pos0 >> 5) + 1, 0, cap - 1)
+    lo = packed.words[word0] >> off
+    # words[word1] << (32 - off); two-step shift so off == 0 yields 0.
+    hi = (packed.words[word1] << 1) << (jnp.uint32(31) - off)
+    mask = code_mask(w_per)
+    u = (lo | hi) & mask
     return unzigzag(u[:n])
 
 

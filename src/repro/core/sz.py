@@ -129,7 +129,6 @@ def decompress(c: SZCompressed) -> jax.Array:
         flatb = delta.reshape((-1,) + (b,) * nd)
         qb = jax.vmap(lorenzo_reconstruct)(flatb).reshape(blk_shape)
         q = _from_blocks(qb, padded_shape, c.shape, b)
-        return q.astype(jnp.float32) * (2.0 * c.eb)
     return q.astype(jnp.float32) * (2.0 * c.eb)
 
 

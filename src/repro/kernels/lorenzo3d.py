@@ -10,7 +10,25 @@ it at < 2% for 64^3+ fields).
 
 The residual uses roll+iota-select instead of pad/concat so every op is a
 lane-local shift — no scatter, no gather, MXU untouched; this kernel is
-purely VPU + DMA and its roofline term is HBM bandwidth (8 bytes/point).
+purely VPU + DMA and its roofline term is HBM bandwidth.
+
+Byte-traffic accounting (B/pt; ``br`` = achieved bits/value, ~5 at the
+paper's best-fit configs):
+
+  =====================================  ============================
+  pipeline stage                         HBM traffic per point
+  =====================================  ============================
+  this kernel (quantize+Lorenzo)         4 read + 4 write  = 8
+  + bitpack.pack_codes (2 scatter-adds)  4 read + ~br/8    = ~5
+  unfused encode total                   ~13
+  fused encode (kernels.sz_fused)        ~9 worst case, ~5.9 effective
+  =====================================  ============================
+
+On the unfused path this kernel is therefore ~60% of encode traffic; the
+fused kernel subsumes it and never materializes the int32 residuals, so
+prefer ``sz_fused``/``ops.sz_compress_kernel(path="fused")`` on TPU and
+keep this kernel as the XLA/interpret fallback and as the oracle the
+byte-identity tests compare against.
 
 The *effective* error bound (user bound minus the f32 roundoff guard, see
 repro.core.sz) is data-dependent, so it arrives as a runtime SMEM scalar —

@@ -16,6 +16,7 @@ from repro.core import bitpack
 from repro.core import zfp as zfp_core
 from repro.kernels import kvc_attention as _kvc
 from repro.kernels import lorenzo3d as _lor
+from repro.kernels import sz_fused as _szf
 from repro.kernels import zfp3d as _zfp
 
 
@@ -26,21 +27,40 @@ def _interpret() -> bool:
 # ------------------------------------------------------------- TPU-SZ -----
 
 
-def sz_compress_kernel(x: jax.Array, eb: float):
+def _resolve_sz_path(path: str) -> str:
+    """``fused`` = single-pass Pallas encode/decode (the TPU production
+    path); ``xla`` = lorenzo3d kernel + word-level bitpack (the non-TPU /
+    interpret fallback).  Both emit byte-identical tile-major streams."""
+    if path == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "xla"
+    if path not in ("fused", "xla"):
+        raise ValueError(f"unknown SZ kernel path {path!r}; want fused|xla|auto")
+    return path
+
+
+def sz_compress_kernel(x: jax.Array, eb: float, path: str = "auto"):
     """Kernel-path SZ compress of a 3-D field: returns (PackedCodes,
-    padded_shape, eb_i). Tile-blocked prediction (GPU-SZ blocking)."""
+    padded_shape, eb_i). Tile-blocked prediction (GPU-SZ blocking); the
+    bitstream is the tile-major layout shared by both paths."""
     tz, ty, tw = _lor.TILE
     pads = [(0, (-s) % t) for s, t in zip(x.shape, (tz, ty, tw))]
     xp = jnp.pad(x, pads)
     eb_i = _lor.guarded_eb(xp, eb)
-    delta = _lor.lorenzo3d_quantize(xp, eb_i, interpret=_interpret())
-    packed = bitpack.pack_codes(delta.reshape(-1))
+    if _resolve_sz_path(path) == "fused":
+        packed = _szf.fused_compress(xp, eb_i, interpret=_interpret())
+    else:
+        delta = _lor.lorenzo3d_quantize(xp, eb_i, interpret=_interpret())
+        packed = bitpack.pack_codes(_szf.tile_major_flatten(delta))
     return packed, xp.shape, eb_i
 
 
-def sz_decompress_kernel(packed, padded_shape, orig_shape, eb_i) -> jax.Array:
-    delta = bitpack.unpack_codes(packed).reshape(padded_shape)
-    xr = _lor.lorenzo3d_reconstruct(delta, eb_i, interpret=_interpret())
+def sz_decompress_kernel(packed, padded_shape, orig_shape, eb_i, path: str = "auto") -> jax.Array:
+    if _resolve_sz_path(path) == "fused":
+        xr = _szf.fused_decompress(packed, tuple(padded_shape), eb_i, interpret=_interpret())
+    else:
+        flat = bitpack.unpack_codes(packed)
+        delta = _szf.tile_major_unflatten(flat, tuple(padded_shape))
+        xr = _lor.lorenzo3d_reconstruct(delta, eb_i, interpret=_interpret())
     return xr[tuple(slice(0, s) for s in orig_shape)]
 
 

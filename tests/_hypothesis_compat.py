@@ -1,0 +1,37 @@
+"""Shared optional-hypothesis shim for the property-based test modules.
+
+``hypothesis`` is an optional dep (see requirements.txt).  When absent, the
+stand-ins below keep the modules importable and turn each ``@given`` test
+into a runtime skip; modules with a bespoke deterministic fallback
+(tests/test_core_bitpack.py) branch on ``HAVE_HYPOTHESIS`` instead.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(**_kw):  # no-op stand-in decorator
+        return lambda f: f
+
+    def given(*_a, **_kw):  # replaces the property test with a runtime skip
+        def deco(f):
+            def skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+
+        return deco
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    st = _StrategyStub()

@@ -1,12 +1,56 @@
-"""Unit + property tests for the block-adaptive bit packer."""
+"""Unit + property tests for the block-adaptive bit packer.
+
+The property-based tests need ``hypothesis`` (optional, see requirements.txt);
+without it a deterministic fallback sweep covers the same ground.
+"""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import bitpack
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+
+def _pack_codes_bitwise(codes: np.ndarray, block: int = bitpack.BLOCK):
+    """The seed 32-pass packer (one scatter pass per bit), kept as the
+    reference the word-level implementation must match byte-for-byte."""
+    n = len(codes)
+    n_blocks = -(-n // block)
+    padded = n_blocks * block
+    u = np.asarray(bitpack.zigzag(jnp.asarray(codes, jnp.int32))).astype(np.uint64)
+    u = np.pad(u, (0, padded - n))
+    ub = u.reshape(n_blocks, block)
+    width = np.asarray(bitpack.bitlength(jnp.asarray(ub, jnp.uint32))).max(axis=1)
+    block_bits = width * block
+    base = np.cumsum(block_bits) - block_bits
+
+    idx_in_block = np.arange(padded) % block
+    blk = np.arange(padded) // block
+    w_per = width[blk]
+    pos0 = base[blk] + idx_in_block * w_per
+
+    capacity = n + 2
+    buf = np.zeros(capacity, np.uint64)
+    valid = np.arange(padded) < n
+    for bit in range(32):
+        active = (bit < w_per) & valid
+        p = pos0 + bit
+        for i in np.nonzero(active)[0]:
+            buf[int(p[i]) >> 5] += ((int(u[i]) >> bit) & 1) << (int(p[i]) & 31)
+    total_bits = int(block_bits.sum()) + n_blocks * bitpack._WIDTH_BITS
+    return buf.astype(np.uint32), width.astype(np.uint8), total_bits
+
+
+def _assert_matches_seed(codes: np.ndarray, block: int = bitpack.BLOCK):
+    p = bitpack.pack_codes(jnp.asarray(codes), block=block)
+    words, widths, total_bits = _pack_codes_bitwise(codes, block)
+    np.testing.assert_array_equal(np.asarray(p.words), words)
+    np.testing.assert_array_equal(np.asarray(p.widths), widths)
+    assert int(p.total_bits) == total_bits
+    back = np.asarray(bitpack.unpack_codes(p, block=block))
+    np.testing.assert_array_equal(back, codes)
 
 
 @pytest.mark.parametrize("n", [1, 5, 1023, 1024, 1025, 4096, 10_000])
@@ -38,6 +82,13 @@ def test_bitlength_exact():
     np.testing.assert_array_equal(np.asarray(bitpack.bitlength(u)), expect)
 
 
+def test_code_mask_exact():
+    w = jnp.arange(33, dtype=jnp.int32)
+    got = np.asarray(bitpack.code_mask(w), np.uint64)
+    expect = (1 << np.arange(33, dtype=np.uint64)) - 1
+    np.testing.assert_array_equal(got, expect)
+
+
 def test_zigzag_order_preserving_magnitude():
     v = jnp.asarray([-3, -2, -1, 0, 1, 2, 3], jnp.int32)
     u = np.asarray(bitpack.zigzag(v))
@@ -45,18 +96,82 @@ def test_zigzag_order_preserving_magnitude():
     assert u[3] == 0 and max(u) <= 6  # small magnitudes -> small codes
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1), min_size=1, max_size=3000),
-    st.sampled_from([64, 256, 1024]),
-)
-def test_roundtrip_property(vals, block):
-    codes = np.asarray(vals, np.int32)
-    p = bitpack.pack_codes(jnp.asarray(codes), block=block)
-    back = np.asarray(bitpack.unpack_codes(p, block=block))
-    np.testing.assert_array_equal(back, codes)
-    # accounting invariant: total_bits >= payload lower bound
-    assert int(p.total_bits) >= len(codes) // block * 8
+# ---- word-level packer vs the seed 32-pass implementation (adversarial) ----
+
+
+def test_seed_identity_all_zero_blocks():
+    _assert_matches_seed(np.zeros(640, np.int32))
+
+
+def test_seed_identity_width32_codes():
+    # int32 min zigzags to 0xFFFFFFFF: full 32-bit codes, lo/hi word split
+    # active at every offset.
+    codes = np.full(130, -(2**31), np.int32)
+    codes[::7] = 2**31 - 1
+    _assert_matches_seed(codes)
+
+
+def test_seed_identity_block_straddling_offsets():
+    # Alternate block widths so block payloads start at every word phase and
+    # codes straddle word boundaries both ways.
+    rng = np.random.default_rng(13)
+    n_blocks = 37
+    codes = np.zeros(n_blocks * bitpack.BLOCK, np.int32)
+    for b in range(n_blocks):
+        w = (3 * b + 1) % 33  # widths 1..32 incl. 0-width blocks skipped
+        lo, hi = -(2 ** max(w - 1, 1)), 2 ** max(w - 1, 1) - 1
+        codes[b * bitpack.BLOCK : (b + 1) * bitpack.BLOCK] = rng.integers(
+            lo, hi + 1, size=bitpack.BLOCK
+        )
+    _assert_matches_seed(codes)
+
+
+@pytest.mark.parametrize("n", [1, 63, 65, 127, 1000])
+def test_seed_identity_ragged_tail(n):
+    # n not a multiple of BLOCK: the padded tail must contribute nothing.
+    rng = np.random.default_rng(n)
+    codes = rng.integers(-(2**15), 2**15, size=n).astype(np.int32)
+    _assert_matches_seed(codes)
+
+
+@pytest.mark.parametrize("block", [64, 256])
+def test_seed_identity_mixed_magnitudes(block):
+    rng = np.random.default_rng(99)
+    codes = (rng.normal(size=3000) * 10 ** rng.integers(0, 9, size=3000)).astype(np.int32)
+    _assert_matches_seed(codes, block=block)
+
+
+# ---------------------------------------- property tests (or fallback) ----
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1), min_size=1, max_size=3000),
+        st.sampled_from([64, 256, 1024]),
+    )
+    def test_roundtrip_property(vals, block):
+        codes = np.asarray(vals, np.int32)
+        p = bitpack.pack_codes(jnp.asarray(codes), block=block)
+        back = np.asarray(bitpack.unpack_codes(p, block=block))
+        np.testing.assert_array_equal(back, codes)
+        # accounting invariant: total_bits >= payload lower bound
+        assert int(p.total_bits) >= len(codes) // block * 8
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("block", [64, 256, 1024])
+    def test_roundtrip_property_fallback(seed, block):
+        """Deterministic stand-in for the hypothesis sweep."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 3000))
+        span = int(rng.integers(1, 31))
+        codes = rng.integers(-(2**span), 2**span, size=n).astype(np.int32)
+        p = bitpack.pack_codes(jnp.asarray(codes), block=block)
+        back = np.asarray(bitpack.unpack_codes(p, block=block))
+        np.testing.assert_array_equal(back, codes)
+        assert int(p.total_bits) >= n // block * 8
 
 
 def test_storage_slicing_matches_accounting():

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
 
 from repro.core import sz, transforms
 from repro.core.api import get_compressor
@@ -113,3 +113,67 @@ def test_jit_cache_stability():
     sz.compress(x2, 1e-2)
     assert sz.compress._cache_size() == n0
     assert c1.shape == (16, 16, 16)
+
+
+@pytest.mark.parametrize("backend", ["core", "kernel"])
+def test_api_backend_roundtrip_abs(backend):
+    """SZCompressor backend selection: both engines honor the ABS bound."""
+    x = jnp.asarray(_smooth_field((16, 72, 130), seed=21))
+    c = get_compressor("tpu-sz", backend=backend)
+    r = c.compress(x, eb=1e-1)
+    xr = np.asarray(c.decompress(r))
+    assert xr.shape == x.shape
+    assert np.abs(xr - np.asarray(x)).max() <= 1e-1 * (1 + 1e-5)
+    assert r.nbytes > 0 and r.meta.get("backend") == ("kernel" if backend == "kernel" else None)
+
+
+def test_api_backend_kernel_pw_rel():
+    """Kernel backend through the log transform: PW_REL bound + sign channel."""
+    x = np.asarray(_smooth_field((16, 64, 128), seed=22))
+    x[0, 0, :7] = 0.0  # exact zeros must survive the sign channel
+    c = get_compressor("tpu-sz", backend="kernel")
+    r = c.compress(jnp.asarray(x), pw_rel=0.01)
+    xr = np.asarray(c.decompress(r))
+    nz = x != 0
+    assert np.abs(xr[nz] / x[nz] - 1.0).max() <= 0.01 * (1 + 0.05)
+    assert (xr[~nz] == 0).all()
+
+
+def test_api_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown SZ backend"):
+        get_compressor("tpu-sz", backend="gpu")
+
+
+def test_vmapped_partition_batching_matches_sequential(monkeypatch):
+    """The multi-partition vmap branch in SZCompressor._compress_parts /
+    _decompress_parts only triggers above HACC_PARTITION elements in
+    production; shrink the partition so CI covers it, and require byte
+    identity with the sequential fallback."""
+    from repro.core import api
+
+    part = 4096
+    monkeypatch.setattr(transforms, "HACC_PARTITION", part)
+    orig_partition = transforms.partition_1d
+    monkeypatch.setattr(transforms, "partition_1d",
+                        lambda x, p=part: orig_partition(x, p))
+
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(np.cumsum(rng.normal(size=5 * part + 33)).astype(np.float32))
+
+    batched = api.SZCompressor()
+    seq = api.SZCompressor()
+    monkeypatch.setattr(api.SZCompressor, "VMAP_ELEM_BUDGET", 1 << 26)
+    r_b = batched.compress(x, eb=0.5)
+    monkeypatch.setattr(api.SZCompressor, "VMAP_ELEM_BUDGET", 1)  # sequential
+    r_s = seq.compress(x, eb=0.5)
+
+    assert r_b.nbytes == r_s.nbytes
+    for cb, cs in zip(r_b.payload["parts"], r_s.payload["parts"]):
+        np.testing.assert_array_equal(np.asarray(cb.packed.words), np.asarray(cs.packed.words))
+        np.testing.assert_array_equal(np.asarray(cb.packed.widths), np.asarray(cs.packed.widths))
+        assert int(cb.packed.total_bits) == int(cs.packed.total_bits)
+
+    monkeypatch.setattr(api.SZCompressor, "VMAP_ELEM_BUDGET", 1 << 26)
+    back = np.asarray(batched.decompress(r_b))
+    assert back.shape == x.shape
+    assert np.abs(back - np.asarray(x)).max() <= 0.5 * (1 + 1e-5)

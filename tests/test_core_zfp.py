@@ -3,8 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
 
 from repro.core import zfp
 from repro.core.api import get_compressor
