@@ -41,6 +41,7 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
         "mode": "smoke" if smoke else mode,
         "n": n,
         "measured_breakdown": throughput.measured_breakdown(n=n),
+        "zfp_stage_breakdown": throughput.zfp_stage_breakdown(n=n),
         "modeled_tpu": throughput.modeled_tpu_kernel_throughput(),
         "packer": throughput.packer_microbench(n=1 << 18 if smoke else 1 << 22),
     }
@@ -66,6 +67,8 @@ def main() -> None:
         _section("Throughput smoke (measured CPU + modeled TPU)")
         record = run_throughput(n=n, vs_bitrate_n=0, smoke=True)
         for r in record["measured_breakdown"]:
+            print(r)
+        for r in record["zfp_stage_breakdown"]:
             print(r)
         for r in record["modeled_tpu"]:
             print(r)
@@ -101,6 +104,8 @@ def main() -> None:
     record = run_throughput(n=n, vs_bitrate_n=32 if fast else 48,
                             mode="fast" if fast else "full")
     for r in record["measured_breakdown"]:
+        print(r)
+    for r in record["zfp_stage_breakdown"]:
         print(r)
     for r in record["modeled_tpu"]:
         print(r)

@@ -66,6 +66,41 @@ def measured_breakdown(n: int = 64):
     return rows
 
 
+def zfp_stage_breakdown(n: int = 64, rates=(4, 8)):
+    """Per-stage TPU-ZFP timings on one Nyx field: transform (stages 1-4),
+    embedded coder (the stage this PR made plane-parallel/word-level), the
+    inverse transform, and the PCIe memcpy analogue — so coder-vs-transform
+    balance is tracked across PRs next to the end-to-end MB/s numbers."""
+    import jax
+
+    from repro.core import zfp as zfp_core
+
+    field = jnp.asarray(cosmo.nyx_fields(n=n)["baryon_density"])
+    mb = field.size * 4 / 1e6
+    transform = jax.jit(zfp_core.block_transform)
+    t_t, (u, emax, gtops) = _time(lambda: transform(field))
+
+    @jax.jit
+    def inverse(u, emax, shape=field.shape):
+        blocks = zfp_core._blocks_from_coeffs(u, emax)
+        return zfp_core._uncarve_blocks(blocks, shape)
+
+    rows = []
+    for rate in rates:
+        t_ec, words = _time(lambda: zfp_core.encode_words(u, gtops, rate))
+        t_dc, u_back = _time(lambda: zfp_core.decode_words(words, gtops, rate))
+        t_it, _ = _time(lambda: inverse(u_back, emax))
+        comp_bytes = words.shape[0] * rate * 8
+        rows.append({
+            "compressor": "tpu-zfp", "rate": rate, "mb": mb,
+            "transform_s": t_t, "coder_c_s": t_ec,
+            "coder_d_s": t_dc, "inv_transform_s": t_it,
+            "memcpy_s": comp_bytes / 1e9 / PCIE_GBS,
+            "coder_c_mbs": mb / t_ec, "coder_d_mbs": mb / t_dc,
+        })
+    return rows
+
+
 def modeled_tpu_kernel_throughput():
     """Fig 9 analogue (modeled, no hardware): kernel bytes / HBM bandwidth.
 
@@ -81,7 +116,14 @@ def modeled_tpu_kernel_throughput():
     bits/value that is 4 + 0.625 + 1.25 ~= 5.9 B/pt effective (8 B/pt if
     the worst-case buffer write is charged in full).
 
-    TPU-ZFP: read 4B + write rate/8 B + headers => 4 + rate/8 B/pt.
+    Unfused TPU-ZFP (zfp3d transform kernel + XLA coder): the transform
+    writes the u32 coefficient planes (4 B/pt) which the coder re-reads
+    (4 B/pt) before emitting rate/8 B/pt => ~12 + rate/8 B/pt.
+
+    Fused TPU-ZFP (``kernels.zfp_fused``): read 4B + write rate/8 B +
+    headers => 4 + (rate + 1.4)/8 B/pt — the coefficient planes never
+    leave VMEM (the 4x4x4 carve transpose outside adds 8 B/pt of
+    reshuffle, charged separately as it is shared by all paths).
     """
     br = 5.0  # bits/value at the paper's best-fit SZ configs
     rows = []
@@ -90,8 +132,10 @@ def modeled_tpu_kernel_throughput():
         ("tpu-sz unfused incl. packing", 13.0),
         ("tpu-sz fused encode (worst-case buffer)", 8.0 + 2 * br / 8.0),
         ("tpu-sz fused encode (effective)", 4.0 + 3 * br / 8.0),
-        ("tpu-zfp rate=4", 4.0 + 0.5),
-        ("tpu-zfp rate=8", 4.0 + 1.0),
+        ("tpu-zfp unfused rate=4", 12.0 + 0.5),
+        ("tpu-zfp unfused rate=8", 12.0 + 1.0),
+        ("tpu-zfp fused rate=4", 4.0 + (4 + 1.4) / 8.0),
+        ("tpu-zfp fused rate=8", 4.0 + (8 + 1.4) / 8.0),
     ):
         gbs = HBM_GBS / bytes_per_pt * 4.0  # GB of f32 input per second
         rows.append({"kernel": name, "bytes_per_point": bytes_per_pt,
@@ -127,6 +171,9 @@ def throughput_vs_bitrate(n: int = 48):
 def main() -> None:
     print("# Fig7: stage breakdown (measured CPU + PCIe model)")
     for r in measured_breakdown():
+        print(r)
+    print("# Fig7b: tpu-zfp per-stage breakdown (transform vs coder vs memcpy)")
+    for r in zfp_stage_breakdown():
         print(r)
     print("# Fig9 analogue: modeled TPU v5e kernel throughput (819 GB/s HBM)")
     for r in modeled_tpu_kernel_throughput():

@@ -1,0 +1,64 @@
+"""jax API compatibility shims for the sharding-aware layers.
+
+The mesh-axis-type API moved across jax releases: ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)`` and ``jax.sharding.get_abstract_mesh``
+exist on current jax but not on the 0.4.x line (where the abstract-mesh
+helpers live under ``jax._src.mesh`` and meshes have no axis types at all).
+Every call site resolves the API through this module so the models, trainer
+and serving engine run on both: with axis types, sharding constraints are
+restricted to the Auto (GSPMD-controlled) axes; without them, every mesh
+axis is treated as Auto — correct on 0.4.x, where partial-manual shard_map
+axis types don't exist either.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def get_abstract_mesh():
+    """The current abstract mesh, or None when unavailable or empty."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        try:
+            from jax._src import mesh as _mesh_lib
+
+            fn = _mesh_lib.get_abstract_mesh
+        except (ImportError, AttributeError):
+            return None
+    try:
+        m = fn()
+    except Exception:
+        return None
+    if m is None or not getattr(m, "axis_names", None):
+        return None
+    return m
+
+
+def auto_axis_names(mesh) -> set:
+    """Names of mesh axes still under GSPMD (Auto) control.
+
+    Inside a partial-manual shard_map the Manual axes must not appear in
+    sharding constraints; on jax without axis types there is no partial-
+    manual mode, so every axis is Auto.
+    """
+    if mesh is None:
+        return set()
+    names = tuple(mesh.axis_names)
+    types = getattr(mesh, "axis_types", None)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if types is None or axis_type is None:
+        return set(names)
+    return {n for n, t in zip(names, types) if t == axis_type.Auto}

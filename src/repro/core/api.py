@@ -23,6 +23,52 @@ from repro.core import bitpack, sz, transforms, zfp
 
 MAX_CHUNK = 1 << 24  # elements per SZ packing call (int32 bit-offset safety)
 
+# Stacked-input element budget per vmapped call: vmapping multiplies every
+# intermediate by the batch size, so an unbounded stack of 2^27-element HACC
+# partitions would OOM a device the sequential loop fits on.  2^26 f32
+# elements (~256 MB input) keeps the dispatch win for the small-partition
+# regimes where dispatch actually dominates.
+VMAP_ELEM_BUDGET = 1 << 26
+
+
+def _vmap_chunks(keys: list[tuple], elem_budget: int):
+    """Shared grouping for chunked-vmap batching: group part indices by
+    ``key`` (whose first element is the part's shape) and split each group
+    into sublists small enough for one vmapped dispatch.  Both compressors'
+    compress and decompress paths drive their batching off this."""
+    by_key: dict[tuple, list[int]] = {}
+    for i, k in enumerate(keys):
+        by_key.setdefault(k, []).append(i)
+    for key, idxs in by_key.items():
+        chunk = max(1, elem_budget // max(int(np.prod(key[0])), 1))
+        for s in range(0, len(idxs), chunk):
+            yield idxs[s : s + chunk]
+
+
+def _tree_stack(group: list) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *group)
+
+
+def _tree_row(batched: Any, j: int) -> Any:
+    return jax.tree_util.tree_map(lambda a: a[j], batched)
+
+
+def _batched_apply(items: list, keys: list[tuple], budget: int, fn) -> list:
+    """Apply jit-able ``fn`` per item with chunked-vmap batching: group the
+    items by ``keys`` (:func:`_vmap_chunks`), stack each group, run one
+    vmapped dispatch, and slice the rows back into a per-item list (so
+    payload layouts and wire formats are unchanged).  Shared by both
+    compressors' compress and decompress paths."""
+    out: list[Any] = [None] * len(items)
+    for sub in _vmap_chunks(keys, budget):
+        if len(sub) == 1:
+            out[sub[0]] = fn(items[sub[0]])
+            continue
+        batched = jax.vmap(fn)(_tree_stack([items[i] for i in sub]))
+        for j, i in enumerate(sub):
+            out[i] = _tree_row(batched, j)
+    return out
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionResult:
@@ -60,6 +106,8 @@ class SZCompressor:
 
     name = "tpu-sz"
 
+    VMAP_ELEM_BUDGET = VMAP_ELEM_BUDGET  # per-class override point (tests)
+
     def __init__(self, block_size: int | None = None, reshape_1d: bool = True,
                  backend: str = "auto"):
         if backend not in ("auto", "core", "kernel"):
@@ -86,62 +134,22 @@ class SZCompressor:
             return shaped, {"orig_len": x.shape[0], "was_1d": True}
         return [x], {"orig_len": int(np.prod(x.shape)), "was_1d": False}
 
-    # Stacked-input element budget per vmapped call: vmapping multiplies
-    # every intermediate (q, delta, zigzag, pack buffer) by the batch size,
-    # so an unbounded stack of 2^27-element HACC partitions would OOM a
-    # device the sequential loop fits on.  2^26 f32 elements (~256 MB input,
-    # ~1.5 GB of batched intermediates) keeps the dispatch win for the
-    # small-partition regimes where dispatch actually dominates.
-    VMAP_ELEM_BUDGET = 1 << 26
-
     def _compress_parts(self, parts: list[jax.Array], eb) -> tuple[list, int]:
-        """Compress all partitions with vmapped dispatches (chunked to
-        ``VMAP_ELEM_BUDGET``) per distinct shape instead of one jit call per
-        partition.  Results are sliced back into a per-part list so the
-        payload layout (and the checkpoint wire format) is unchanged."""
-        by_shape: dict[tuple[int, ...], list[int]] = {}
-        for i, p in enumerate(parts):
-            by_shape.setdefault(p.shape, []).append(i)
-        comp: list[Any] = [None] * len(parts)
-        nbits = 0
-        for shape, idxs in by_shape.items():
-            chunk = max(1, self.VMAP_ELEM_BUDGET // max(int(np.prod(shape)), 1))
-            for s in range(0, len(idxs), chunk):
-                sub = idxs[s : s + chunk]
-                if len(sub) == 1:
-                    c = sz.compress(parts[sub[0]], eb, self.block_size)
-                    comp[sub[0]] = c
-                    nbits += int(c.packed.total_bits)
-                    continue
-                stacked = jnp.stack([parts[i] for i in sub])
-                batched = jax.vmap(lambda p: sz.compress(p, eb, self.block_size))(stacked)
-                # per-part total_bits are int32; sum on host in int64 (many
-                # partitions can exceed 2**31 bits combined)
-                nbits += int(np.sum(np.asarray(batched.packed.total_bits, dtype=np.int64)))
-                for j, i in enumerate(sub):
-                    comp[i] = jax.tree_util.tree_map(lambda a, j=j: a[j], batched)
+        """Compress all partitions with vmapped dispatches (grouped/chunked
+        by :func:`_batched_apply`) instead of one jit call per partition."""
+        comp = _batched_apply(parts, [(p.shape,) for p in parts],
+                              self.VMAP_ELEM_BUDGET,
+                              lambda p: sz.compress(p, eb, self.block_size))
+        # per-part total_bits are int32; sum on host in int64 (many
+        # partitions can exceed 2**31 bits combined)
+        nbits = int(np.sum([np.asarray(c.packed.total_bits, np.int64) for c in comp]))
         return comp, nbits
 
     def _decompress_parts(self, parts_c: list) -> list[jax.Array]:
         """Mirror of :meth:`_compress_parts` for the read path: one vmapped
         dispatch per distinct (shape, block_size) group of partitions."""
-        by_key: dict[tuple, list[int]] = {}
-        for i, c in enumerate(parts_c):
-            by_key.setdefault((c.shape, c.block_size), []).append(i)
-        out: list[jax.Array] = [None] * len(parts_c)  # type: ignore[list-item]
-        for (shape, _), idxs in by_key.items():
-            chunk = max(1, self.VMAP_ELEM_BUDGET // max(int(np.prod(shape)), 1))
-            for s in range(0, len(idxs), chunk):
-                sub = idxs[s : s + chunk]
-                if len(sub) == 1:
-                    out[sub[0]] = sz.decompress(parts_c[sub[0]])
-                    continue
-                group = [parts_c[i] for i in sub]
-                batched = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *group)
-                xs = jax.vmap(sz.decompress)(batched)
-                for j, i in enumerate(sub):
-                    out[i] = xs[j]
-        return out
+        return _batched_apply(parts_c, [(c.shape, c.block_size) for c in parts_c],
+                              self.VMAP_ELEM_BUDGET, sz.decompress)
 
     def compress(self, x: jax.Array, eb: float | None = None, pw_rel: float | None = None,
                  **_: Any) -> CompressionResult:
@@ -196,32 +204,96 @@ class SZCompressor:
 
 
 class ZFPCompressor:
-    """TPU-ZFP front end (fixed-rate). 1-D fields go through the paper's
-    2097152x8x8 reshape; 2-D fields get a trailing unit axis."""
+    """TPU-ZFP front end (fixed-rate). 1-D fields are partitioned to the
+    paper's HACC layout and go through the (N/64) x 8 x 8 reshape per
+    partition (§IV-B4); 2-D fields get a trailing unit axis.
+
+    ``backend`` selects the encode/decode engine (mirroring ``SZCompressor``):
+      * ``core``   — the pure-XLA word-level coder in ``repro.core.zfp``
+                     (the default off-TPU),
+      * ``kernel`` — the fused single-pass Pallas pipeline from
+                     ``repro.kernels.zfp_fused`` (block-float + lifting +
+                     negabinary + header + embedded packing in one VMEM
+                     pass; fastest on TPU, where the coefficient planes
+                     never touch HBM),
+      * ``auto``   — ``kernel`` on TPU, ``core`` elsewhere.
+    All backends emit byte-identical ``words``/``emax``/``gtops`` streams
+    and decode each other's payloads.
+
+    Accounting: ``raw_nbytes`` (and hence ``ratio``/``bitrate``) always uses
+    the *original* pre-reshape element count — the zero padding the 1-D/2-D
+    reshapes introduce is charged to the compressed size, not the input.
+    """
 
     name = "tpu-zfp"
+
+    VMAP_ELEM_BUDGET = VMAP_ELEM_BUDGET  # per-class override point (tests)
+
+    def __init__(self, reshape_1d: bool = True, backend: str = "auto"):
+        if backend not in ("auto", "core", "kernel"):
+            raise ValueError(f"unknown ZFP backend {backend!r}; want auto|core|kernel")
+        self.reshape_1d = reshape_1d
+        self.backend = backend
+
+    def _use_kernel(self) -> bool:
+        if self.backend == "kernel":
+            return True
+        return self.backend == "auto" and jax.default_backend() == "tpu"
+
+    def _canonical(self, x: jax.Array) -> tuple[list[jax.Array], dict]:
+        if x.ndim == 1:
+            # Paper §IV-B4: cuZFP on HACC uses (N/64) x 8 x 8 partitions.
+            # The coder is 3-D only, so the reshape is mandatory;
+            # ``reshape_1d=False`` just skips the HACC partitioning.
+            parts = transforms.partition_1d(x) if self.reshape_1d else [x]
+            shaped = [transforms.to_3d(p, (-(-p.shape[0] // 64), 8, 8)) for p in parts]
+            return shaped, {"orig_len": x.shape[0], "was_1d": True}
+        if x.ndim == 2:
+            x = x[:, :, None]
+        return [x], {"orig_len": int(np.prod(x.shape)), "was_1d": False}
+
+    def _compress_parts(self, parts: list[jax.Array], rate: int) -> list:
+        """Chunked-vmap batching over same-shape partitions via
+        :func:`_batched_apply` (shared with ``SZCompressor``).  The kernel
+        backend dispatches per partition (a Pallas grid already walks the
+        whole field)."""
+        if self._use_kernel():
+            from repro.kernels import ops as kops
+
+            return [kops.zfp_compress_kernel(p, rate) for p in parts]
+        return _batched_apply(parts, [(p.shape,) for p in parts],
+                              self.VMAP_ELEM_BUDGET,
+                              lambda p: zfp.compress(p, rate))
+
+    def _decompress_parts(self, parts_c: list) -> list[jax.Array]:
+        if self._use_kernel():
+            from repro.kernels import ops as kops
+
+            return [kops.zfp_decompress_kernel(c) for c in parts_c]
+        return _batched_apply(parts_c, [(c.shape, c.rate) for c in parts_c],
+                              self.VMAP_ELEM_BUDGET, zfp.decompress)
 
     def compress(self, x: jax.Array, rate: int | None = None, **_: Any) -> CompressionResult:
         if rate is None:
             raise ValueError("ZFP requires rate= (bits/value)")
-        raw = int(np.prod(x.shape)) * 4
+        raw = int(np.prod(x.shape)) * 4  # original count: padding not charged
         orig_shape = x.shape
-        if x.ndim == 1:
-            # Paper §IV-B4: cuZFP on HACC uses an (N/64) x 8 x 8 reshape.
-            lead = -(-x.shape[0] // 64)
-            x = transforms.to_3d(x, (lead, 8, 8))
-        elif x.ndim == 2:
-            x = x[:, :, None]
-        c = zfp.compress(x, rate)
-        nbytes = zfp.compressed_nbytes(c)
-        return CompressionResult({"c": c, "orig_shape": orig_shape}, nbytes, raw,
-                                 {"mode": "rate", "rate": rate})
+        parts, shape_meta = self._canonical(x)
+        comp = self._compress_parts(parts, rate)
+        nbytes = sum(zfp.compressed_nbytes(c) for c in comp)
+        backend = "kernel" if self._use_kernel() else "core"
+        payload = {"parts": comp, "orig_shape": orig_shape, **shape_meta}
+        return CompressionResult(payload, nbytes, raw,
+                                 {"mode": "rate", "rate": rate, "backend": backend,
+                                  **shape_meta})
 
     def decompress(self, r: CompressionResult) -> jax.Array:
-        x = zfp.decompress(r.payload["c"])
+        parts = self._decompress_parts(r.payload["parts"])
         orig = r.payload["orig_shape"]
-        if len(orig) == 1:
-            return x.reshape(-1)[: orig[0]]
+        if r.payload["was_1d"]:
+            flats = [p.reshape(-1) for p in parts]
+            return jnp.concatenate(flats)[: orig[0]]
+        x = parts[0]
         if len(orig) == 2:
             return x[:, :, 0]
         return x

@@ -19,10 +19,20 @@ header instead: the top occupied bit plane of each of the 10 sequency groups
 (5 bits x 10 groups + 8-bit emax = 58 header bits, charged to the budget).
 Given the header, the entire bit schedule (which (plane, group) emits where)
 is a pure function of per-block integers, so encode and decode become
-data-independent gather/scatter over bit positions — exactly the uniform
+data-independent word assembly over bit positions — exactly the uniform
 lane work the VPU wants. This recovers ZFP's per-coefficient adaptivity
 (high-sequency coefficients with leading zeros cost nothing) without any
 data-dependent branching.
+
+The coder itself is **plane-parallel and word-level** (DESIGN.md §3): all 32
+bit planes are processed at once as stream items instead of one serial pass
+per plane.  Each plane's significant bits form a <= 64-bit payload
+(``_plane_payloads``); the payload's placement is a pure function of the
+header, so the ``rate*64``-bit stream is assembled with O(words-per-block)
+masked shift/OR sums (``encode_words``) and read back with three word
+gathers per plane (``decode_words``) — no per-bit-plane scatter/gather passes, and
+no data-dependent control flow.  The emitted stream is bit-identical to the
+original 32-pass formulation (tests pin embedded seed-reference streams).
 
 The advertised rate is exact: every block consumes ``rate*64`` bits, so
 CR = 32/rate precisely, matching cuZFP's fixed-rate contract.
@@ -43,7 +53,9 @@ import jax.numpy as jnp
 import numpy as np
 
 Q = 25  # fixed-point fractional bits; transform growth (< 2^3) keeps int32 safe
-_NBMASK = jnp.uint32(0xAAAAAAAA)
+_NBMASK_VAL = 0xAAAAAAAA  # python int: jnp scalars are built per-call so the
+# negabinary helpers stay usable inside Pallas bodies (a module-level device
+# array would be a captured constant, which pallas_call rejects)
 _EMAX_BIAS = 128  # stored emax = e + bias; 0 reserved for all-zero blocks
 N_GROUPS = 10  # sequency groups: total degree i+j+k in 0..9
 _HEADER_BITS = 8 + 5 * N_GROUPS  # emax + per-group top plane
@@ -146,11 +158,13 @@ def exact_exp2(k: jax.Array) -> jax.Array:
 
 def negabinary(i: jax.Array) -> jax.Array:
     u = i.astype(jnp.uint32)
-    return (u + _NBMASK) ^ _NBMASK
+    m = jnp.uint32(_NBMASK_VAL)
+    return (u + m) ^ m
 
 
 def inv_negabinary(u: jax.Array) -> jax.Array:
-    return ((u ^ _NBMASK) - _NBMASK).astype(jnp.int32)
+    m = jnp.uint32(_NBMASK_VAL)
+    return ((u ^ m) - m).astype(jnp.int32)
 
 
 def _bitlength32(u: jax.Array) -> jax.Array:
@@ -204,7 +218,11 @@ def _schedule_offsets(gtops: jax.Array) -> jax.Array:
     Stream order: plane 31 -> 0 (major), group 0 -> 9 (minor). Item (p, g)
     present iff p < gtops[:, g], contributing GROUP_SIZES[g] bits. Returns
     int32[n_blocks, 32*10] exclusive prefix sums — a pure function of the
-    header, identical for encoder and decoder.
+    header, identical for encoder and decoder.  (Reference form of the
+    schedule; the coder below consumes the factored per-plane form — the
+    closed-form ``OFF``/``keep`` from :func:`_plane_offsets` plus the
+    accumulated within-plane group offsets in :func:`_plane_payloads` —
+    whose ``OFF[j] + woff[j, g]`` equals this.)
     """
     n = gtops.shape[0]
     planes = jnp.arange(31, -1, -1, dtype=jnp.int32)  # stream-major order
@@ -215,66 +233,290 @@ def _schedule_offsets(gtops: jax.Array) -> jax.Array:
     return cum - contrib
 
 
+# --------------------------- plane-parallel word-level embedded coder -----
+#
+# Stream items are (plane, group) bit runs, plane 31 -> 0 major, group 0 -> 9
+# minor.  The coder factors the flat schedule into a per-plane layout: plane
+# j (stream-major, encoding bit plane p = 31 - j) owns a payload of
+# ``pw[j] = sum_g w[j, g] <= 64`` bits, with group g's run at within-plane
+# offset ``woff[j, g]``.  Every quantity is a pure function of the gtops
+# header, so encoder and decoder derive identical layouts (DESIGN.md §3).
+
+
+def _code_mask(w: jax.Array) -> jax.Array:
+    """uint32 mask of the low ``w`` bits, exact for w in [0, 32]."""
+    w = w.astype(jnp.int32)
+    shift = (32 - jnp.maximum(w, 1)).astype(jnp.uint32)  # in [0, 31]
+    return jnp.where(w == 0, jnp.uint32(0), jnp.uint32(0xFFFFFFFF) >> shift)
+
+
+def _plane_offsets(gtops: jax.Array, budget: int):
+    """Header-derived plane placement, in closed form (no prefix scans).
+
+    Group g is present in stream-major plane j (bit plane p = 31 - j) iff
+    ``p < gtops[g]``, i.e. ``gtops[g] + j - 32 >= 0``, and the number of
+    *earlier* planes it occupies is ``max(0, gtops[g] + j - 32)``.  Summing
+    sizes over groups therefore gives both the plane's global exclusive bit
+    offset and its payload width without any cumulative scan:
+
+    OFF   int32[n, 32]  global exclusive bit offset of plane j's payload
+    keep  int32[n, 32]  payload bits surviving the ``budget`` truncation
+    """
+    j = jnp.arange(32, dtype=jnp.int32)[None, :]
+    off = jnp.zeros_like(j)
+    pw = jnp.zeros_like(j)
+    for g in range(N_GROUPS):
+        t = gtops[:, g][:, None] + j - 32  # (n, 32)
+        sz = int(GROUP_SIZES[g])
+        off = off + sz * jnp.maximum(t, 0)
+        pw = pw + sz * (t >= 0).astype(jnp.int32)
+    keep = jnp.clip(budget - off, 0, pw)
+    return off, keep
+
+
+def _mask64(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) uint32 masks keeping the low ``keep`` bits of a 64-bit field."""
+    return _code_mask(jnp.minimum(keep, 32)), _code_mask(jnp.clip(keep - 32, 0, 32))
+
+
+def _bit_transpose32(a: jax.Array) -> jax.Array:
+    """Vectorized 32x32 bit-matrix transpose (Hacker's Delight 7-3).
+
+    ``a``: uint32[n, 32] — 32 row words per block.  Returns ``b`` with
+    ``b[:, c] bit k == a[:, 31 - k] bit (31 - c)`` (the algorithm's native
+    anti-diagonal orientation; callers absorb it with a row flip).  Five
+    mask-and-swap stages over (n, 16) halves — O(n log 32) VPU work, the
+    step that turns the 32-pass plane loop into straight word arithmetic.
+    """
+    n = a.shape[0]
+    m = jnp.uint32(0x0000FFFF)
+    j = 16
+    while j:
+        r = a.reshape(n, 32 // (2 * j), 2, j)
+        lo, hi = r[:, :, 0, :], r[:, :, 1, :]
+        t = (lo ^ (hi >> jnp.uint32(j))) & m
+        lo = lo ^ t
+        hi = hi ^ (t << jnp.uint32(j))
+        a = jnp.stack([lo, hi], axis=2).reshape(n, 32)
+        j >>= 1
+        if j:
+            m = m ^ (m << jnp.uint32(j))
+    return a
+
+
+# In sequency order the 10 groups split exactly at bit 32: groups 0-4 fill
+# coefficients 0..31 and groups 5-9 fill 32..63, so the *uncompacted* plane
+# bit-matrix is two clean 32x32 transposes of the coefficient words.
+_FIXED_START = tuple(int(s) for s in _gstart)  # (0,1,4,10,20,32,44,54,60,63)
+assert _FIXED_START[5] == 32
+
+
+def _plane_words(u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """uint32[n, 64] sequency coefficients -> (W0, W1) uint32[n, 32]:
+    ``W0[:, j] bit c`` = bit plane ``31 - j`` (stream-major) of coefficient
+    ``c``; W1 likewise for coefficients 32..63."""
+    w0 = _bit_transpose32(u[:, 31::-1])
+    w1 = _bit_transpose32(u[:, :31:-1])
+    return w0, w1
+
+
+def _coef_words(w0: jax.Array, w1: jax.Array) -> jax.Array:
+    """Inverse of :func:`_plane_words` (the transpose is an involution)."""
+    return jnp.concatenate(
+        [_bit_transpose32(w0)[:, ::-1], _bit_transpose32(w1)[:, ::-1]], axis=1
+    )
+
+
+def _group_widths(gtops: jax.Array, g: int) -> jax.Array:
+    """int32[n, 32]: bits group ``g`` contributes to each stream-major plane
+    (its size when present, else 0) — a pure function of the header."""
+    j = jnp.arange(32, dtype=jnp.int32)[None, :]
+    present = gtops[:, g][:, None] + j >= 32  # p = 31 - j < gtops[g]
+    return jnp.where(present, jnp.int32(int(GROUP_SIZES[g])), 0)
+
+
+def _plane_payloads(u: jax.Array, gtops: jax.Array):
+    """Assemble every plane's <= 64-bit compacted payload at once.
+
+    ``u``: uint32[n, 64] negabinary coefficients in sequency order. Returns
+    (plo, phi) uint32[n, 32]: plane j's payload bits [0, 32) and [32, 64).
+    A group's run is its coefficients' plane-j bits in rank order; a bit set
+    at plane p implies bitlength > p, i.e. the group is present — so absent
+    groups contribute zero runs with no masking.  Runs are sliced from the
+    transposed plane bit-matrix at static offsets and compacted to the
+    header-derived within-plane offsets (accumulated group widths); a run
+    spans at most two of the payload's words (run offset + run width <= 64),
+    so compaction is a masked shift/OR sum over the 10 sequency segments.
+    """
+    w0, w1 = _plane_words(u)
+    n = u.shape[0]
+    plo = jnp.zeros((n, 32), jnp.uint32)
+    phi = jnp.zeros((n, 32), jnp.uint32)
+    woff = jnp.zeros((n, 32), jnp.int32)
+    for g in range(N_GROUPS):
+        src = w0 if _FIXED_START[g] < 32 else w1
+        s0 = jnp.uint32(_FIXED_START[g] & 31)
+        run = (src >> s0) & _code_mask(jnp.int32(int(GROUP_SIZES[g])))
+        o1 = (woff & 31).astype(jnp.uint32)
+        in_hi = woff >= 32
+        lo_c = run << o1
+        hi_c = (run >> 1) >> (jnp.uint32(31) - o1)  # run >> (32 - o1); 0 at o1 == 0
+        plo = plo | jnp.where(in_hi, jnp.uint32(0), lo_c)
+        phi = phi | jnp.where(in_hi, lo_c, hi_c)
+        woff = woff + _group_widths(gtops, g)
+    return plo, phi
+
+
+def _encode_words_impl(u: jax.Array, gtops: jax.Array, rate: int) -> jax.Array:
+    """Un-jitted encode body — pure elementwise/slice jnp, so the fused
+    Pallas kernel (``repro.kernels.zfp_fused``) traces the *same* code in
+    VMEM and the streams agree across paths by construction."""
+    budget = rate * 64 - _HEADER_BITS
+    wpb = (budget + 31) // 32
+    gtops = gtops.astype(jnp.int32)
+    OFF, keep = _plane_offsets(gtops, budget)
+    plo, phi = _plane_payloads(u, gtops)
+    mlo, mhi = _mask64(keep)
+    plo = plo & mlo
+    phi = phi & mhi
+    sh = (OFF & 31).astype(jnp.uint32)
+    w0 = OFF >> 5  # first word the plane payload touches
+    c0 = plo << sh
+    c1 = ((plo >> 1) >> (jnp.uint32(31) - sh)) | (phi << sh)
+    c2 = (phi >> 1) >> (jnp.uint32(31) - sh)
+    cols = []
+    for j in range(wpb):
+        # Bit positions are globally disjoint, so OR-ing == bit placement.
+        contrib = (
+            jnp.where(w0 == j, c0, jnp.uint32(0))
+            | jnp.where(w0 + 1 == j, c1, jnp.uint32(0))
+            | jnp.where(w0 + 2 == j, c2, jnp.uint32(0))
+        )
+        cols.append(jnp.sum(contrib, axis=1, dtype=jnp.uint32))
+    return jnp.stack(cols, axis=1)
+
+
+@partial(jax.jit, static_argnames=("rate",))
+def encode_words(u: jax.Array, gtops: jax.Array, rate: int) -> jax.Array:
+    """Word-level embedded encode: (u, gtops) -> uint32[n, wpb] stream.
+
+    Bit-identical to the reference per-plane formulation (tests pin seed
+    streams).  Plane payloads land word-aligned-or-straddling, so each plane
+    touches at most 3 of the block's words; the stream is a masked shift/OR
+    sum over the 32 planes per word — O(words-per-block) vector passes, no
+    scatter.
+    """
+    return _encode_words_impl(u, gtops, rate)
+
+
+def _extract_coeffs(g0: jax.Array, g1: jax.Array, g2: jax.Array,
+                    OFF: jax.Array, keep: jax.Array, gtops: jax.Array) -> jax.Array:
+    """Shared decode tail: the 3 fetched words per plane -> uint32[n, 64]
+    sequency-order coefficients.  Pure elementwise/slice jnp (reused inside
+    the fused Pallas decode kernel, which fetches the words without gathers).
+    """
+    sh = (OFF & 31).astype(jnp.uint32)
+    plo = (g0 >> sh) | ((g1 << 1) << (jnp.uint32(31) - sh))
+    phi = (g1 >> sh) | ((g2 << 1) << (jnp.uint32(31) - sh))
+    mlo, mhi = _mask64(keep)
+    plo = plo & mlo
+    phi = phi & mhi
+    # Extract each group's run from its compacted plane payload, place it at
+    # the group's static offset in the plane bit-matrix, then transpose the
+    # matrix back into per-coefficient words.
+    n32 = plo.shape
+    w0m = jnp.zeros(n32, jnp.uint32)
+    w1m = jnp.zeros(n32, jnp.uint32)
+    woff = jnp.zeros(n32, jnp.int32)
+    for g in range(N_GROUPS):
+        o1 = (woff & 31).astype(jnp.uint32)
+        in_hi = woff >= 32
+        base_lo = jnp.where(in_hi, phi, plo)
+        base_hi = jnp.where(in_hi, jnp.uint32(0), phi)
+        run = ((base_lo >> o1) | ((base_hi << 1) << (jnp.uint32(31) - o1)))
+        wg = _group_widths(gtops, g)
+        run = run & _code_mask(wg)
+        if _FIXED_START[g] < 32:
+            w0m = w0m | (run << jnp.uint32(_FIXED_START[g]))
+        else:
+            w1m = w1m | (run << jnp.uint32(_FIXED_START[g] - 32))
+        woff = woff + wg
+    return _coef_words(w0m, w1m)
+
+
+@partial(jax.jit, static_argnames=("rate",))
+def decode_words(words: jax.Array, gtops: jax.Array, rate: int) -> jax.Array:
+    """Inverse of :func:`encode_words`: stream -> uint32[n, 64] sequency-order
+    negabinary coefficients (exactly the bits the budget admitted).
+
+    Each plane's <= 64-bit payload spans at most 3 stream words, fetched with
+    three flat gathers (vs one full-buffer gather per bit plane before)."""
+    budget = rate * 64 - _HEADER_BITS
+    n, wpb = words.shape
+    gtops = gtops.astype(jnp.int32)
+    OFF, keep = _plane_offsets(gtops, budget)
+    flat = words.reshape(-1)
+    row0 = jnp.arange(n, dtype=jnp.int32)[:, None] * wpb
+    lim = n * wpb - 1
+    w0 = OFF >> 5
+    g0 = flat[jnp.clip(row0 + w0, 0, lim)]
+    g1 = flat[jnp.clip(row0 + w0 + 1, 0, lim)]
+    g2 = flat[jnp.clip(row0 + w0 + 2, 0, lim)]
+    return _extract_coeffs(g0, g1, g2, OFF, keep, gtops)
+
+
+def payload_words(rate: int) -> int:
+    """Stream words per block at ``rate`` bits/value (header inside budget)."""
+    budget = rate * 64 - _HEADER_BITS
+    if budget <= 0:
+        raise ValueError(f"rate={rate} leaves no payload after the {_HEADER_BITS}-bit header")
+    return (budget + 31) // 32
+
+
 @partial(jax.jit, static_argnames=("rate",))
 def compress(x: jax.Array, rate: int) -> ZFPCompressed:
     """Fixed-rate compress a 3-D float32 field at ``rate`` bits/value."""
     assert x.ndim == 3, "TPU-ZFP operates on 3-D fields; reshape first (see api.py)"
-    budget = rate * 64 - _HEADER_BITS
-    if budget <= 0:
-        raise ValueError(f"rate={rate} leaves no payload after the {_HEADER_BITS}-bit header")
+    payload_words(rate)  # validates the rate
     u, emax, gtops = block_transform(x)
-    n = u.shape[0]
-    off = _schedule_offsets(gtops)
+    words = encode_words(u, gtops, rate)
+    return ZFPCompressed(words, emax, gtops.astype(jnp.uint8), x.shape, rate)
 
-    wpb = (budget + 31) // 32
-    buf = jnp.zeros((n * wpb,), jnp.uint32)
-    g_of = jnp.asarray(GROUP_OF_COEF)  # (64,)
-    rank = jnp.asarray(RANK_IN_GROUP)  # (64,)
-    row0 = jnp.arange(n, dtype=jnp.int32)[:, None] * wpb
 
-    for p in range(31, -1, -1):
-        item = (31 - p) * N_GROUPS  # static base index into the schedule
-        off_pg = off[:, item + g_of]  # (n, 64) bit offset of each coef's item
-        pos = off_pg + rank[None, :]
-        active = (p < gtops[:, g_of]) & (pos < budget)
-        bit = (u >> jnp.uint32(p)) & 1
-        word = row0 + (pos >> 5)
-        shift = (pos & 31).astype(jnp.uint32)
-        buf = buf.at[jnp.where(active, word, 0)].add(
-            jnp.where(active, bit << shift, jnp.uint32(0)), mode="drop"
-        )
+def _take_static(u: jax.Array, perm) -> jax.Array:
+    """Static column permutation as 64 unit slices + concat — the Pallas-safe
+    form (a kernel body may not capture a constant index array; static lane
+    slices lower fine)."""
+    return jnp.concatenate([u[:, int(p):int(p) + 1] for p in perm], axis=1)
 
-    return ZFPCompressed(buf.reshape(n, wpb), emax, gtops.astype(jnp.uint8), x.shape, rate)
+
+def _blocks_from_indexed(u_idx: jax.Array, emax: jax.Array) -> jax.Array:
+    """Invert stages 1-3: *index-order* coefficients + emax -> f32 blocks.
+    Pure jnp (shared with the fused Pallas decode kernel)."""
+    n = u_idx.shape[0]
+    coef = inv_negabinary(u_idx).reshape(n, 4, 4, 4)
+    ints = _inv_lift3d(coef)
+    e = emax.astype(jnp.int32) - _EMAX_BIAS
+    nonzero = emax.astype(jnp.int32) > 0
+    scale = jnp.where(nonzero, exact_exp2(e - Q), 0.0)
+    return ints.astype(jnp.float32) * scale[:, None, None, None]
+
+
+def _blocks_from_coeffs(u: jax.Array, emax: jax.Array) -> jax.Array:
+    """Invert stages 1-4: sequency-order coefficients + emax -> f32 blocks."""
+    return _blocks_from_indexed(u[:, IPERM], emax)
+
+
+def blocks_from_stream(words: jax.Array, emax: jax.Array, gtops: jax.Array,
+                       rate: int) -> jax.Array:
+    """Decode a stream back to float32 blocks (n, 4, 4, 4) — the inverse of
+    stages 1-5 given the per-block header arrays."""
+    return _blocks_from_coeffs(decode_words(words, gtops, rate), emax)
 
 
 @jax.jit
 def decompress(c: ZFPCompressed) -> jax.Array:
-    budget = c.rate * 64 - _HEADER_BITS
-    n, wpb = c.words.shape
-    gtops = c.gtops.astype(jnp.int32)
-    off = _schedule_offsets(gtops)
-    flat = c.words.reshape(-1)
-    g_of = jnp.asarray(GROUP_OF_COEF)
-    rank = jnp.asarray(RANK_IN_GROUP)
-    row0 = jnp.arange(n, dtype=jnp.int32)[:, None] * wpb
-
-    u = jnp.zeros((n, 64), jnp.uint32)
-    for p in range(31, -1, -1):
-        item = (31 - p) * N_GROUPS
-        off_pg = off[:, item + g_of]
-        pos = off_pg + rank[None, :]
-        active = (p < gtops[:, g_of]) & (pos < budget)
-        word = jnp.clip(row0 + (pos >> 5), 0, n * wpb - 1)
-        shift = (pos & 31).astype(jnp.uint32)
-        bit = (flat[word] >> shift) & 1
-        u = u | jnp.where(active, bit << jnp.uint32(p), jnp.uint32(0))
-
-    coef = inv_negabinary(u[:, IPERM]).reshape(n, 4, 4, 4)
-    ints = _inv_lift3d(coef)
-    e = c.emax.astype(jnp.int32) - _EMAX_BIAS
-    nonzero = c.emax > 0
-    scale = jnp.where(nonzero, exact_exp2(e - Q), 0.0)
-    blocks = ints.astype(jnp.float32) * scale[:, None, None, None]
+    blocks = blocks_from_stream(c.words, c.emax, c.gtops, c.rate)
     return _uncarve_blocks(blocks, c.shape)
 
 
@@ -283,6 +525,10 @@ def compressed_nbytes(c: ZFPCompressed) -> int:
     return (n_blocks * c.rate * 64 + 7) // 8  # headers inside the budget
 
 
-def compression_ratio(c: ZFPCompressed) -> float:
-    raw = float(np.prod(c.shape)) * 4.0
+def compression_ratio(c: ZFPCompressed, n_values: int | None = None) -> float:
+    """CR against the *original* value count.  ``c.shape`` is the (possibly
+    padded) 3-D shape the coder saw; callers that reshaped a 1-D/2-D field
+    pass the pre-reshape element count so padding doesn't inflate the ratio.
+    """
+    raw = 4.0 * (float(np.prod(c.shape)) if n_values is None else float(n_values))
     return raw / float(compressed_nbytes(c))

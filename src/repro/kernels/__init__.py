@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+import jax
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """The shared Pallas interpret policy: compile on TPU, interpret
+    elsewhere (the kernels TARGET TPU; other backends validate them in
+    interpret mode).  An explicit ``interpret`` wins.  Every kernel module
+    resolves the policy here so path selection can't silently diverge."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret

@@ -14,14 +14,12 @@ import numpy as np
 
 from repro.core import bitpack
 from repro.core import zfp as zfp_core
+from repro.kernels import default_interpret as _interpret
 from repro.kernels import kvc_attention as _kvc
 from repro.kernels import lorenzo3d as _lor
 from repro.kernels import sz_fused as _szf
 from repro.kernels import zfp3d as _zfp
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels import zfp_fused as _zfpf
 
 
 # ------------------------------------------------------------- TPU-SZ -----
@@ -78,6 +76,58 @@ def zfp_transform_kernel(x: jax.Array):
     u, emax, gtops = _zfp.zfp3d_transform(blocks, interpret=_interpret())
     u = u[:nb][:, zfp_core.PERM]  # sequency order (permutation stays jnp)
     return u, emax[:nb].astype(jnp.uint8), gtops[:nb]
+
+
+def _resolve_zfp_path(path: str) -> str:
+    """``fused`` = single-pass Pallas encode/decode (``kernels.zfp_fused``,
+    the TPU production path); ``xla`` = zfp3d transform kernel + the
+    word-level jnp coder.  All paths (incl. ``repro.core.zfp``) emit
+    byte-identical streams."""
+    if path == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "xla"
+    if path not in ("fused", "xla"):
+        raise ValueError(f"unknown ZFP kernel path {path!r}; want fused|xla|auto")
+    return path
+
+
+def _pad_blocks(a: jax.Array, tile: int) -> jax.Array:
+    pad = (-a.shape[0]) % tile
+    if pad:
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+def zfp_compress_kernel(x: jax.Array, rate: int, path: str = "auto") -> zfp_core.ZFPCompressed:
+    """Kernel-path fixed-rate ZFP compress of a 3-D field.  Returns the same
+    ``ZFPCompressed`` pytree as ``repro.core.zfp.compress`` — byte-identical
+    ``words``/``emax``/``gtops`` on every path."""
+    blocks = zfp_core._carve_blocks(x.astype(jnp.float32))
+    nb = blocks.shape[0]
+    if _resolve_zfp_path(path) == "fused":
+        blocks = _pad_blocks(blocks, _zfpf.BLOCKS_PER_TILE)
+        words, emax, gtops = _zfpf.fused_compress_blocks(
+            blocks, rate, interpret=_interpret())
+    else:
+        blocks = _pad_blocks(blocks, _zfp.BLOCKS_PER_TILE)
+        u, emax, gtops = _zfp.zfp3d_transform(blocks, interpret=_interpret())
+        words = zfp_core.encode_words(u[:, zfp_core.PERM], gtops, rate)
+    return zfp_core.ZFPCompressed(
+        words[:nb], emax[:nb].astype(jnp.uint8), gtops[:nb].astype(jnp.uint8),
+        x.shape, rate)
+
+
+def zfp_decompress_kernel(c: zfp_core.ZFPCompressed, path: str = "auto") -> jax.Array:
+    """Kernel-path decode of :func:`zfp_compress_kernel` output (also reads
+    ``repro.core.zfp.compress`` streams — same layout)."""
+    if _resolve_zfp_path(path) == "fused":
+        nb = c.words.shape[0]
+        words = _pad_blocks(c.words, _zfpf.BLOCKS_PER_TILE)
+        emax = _pad_blocks(c.emax.astype(jnp.int32), _zfpf.BLOCKS_PER_TILE)
+        gtops = _pad_blocks(c.gtops.astype(jnp.int32), _zfpf.BLOCKS_PER_TILE)
+        blocks = _zfpf.fused_decompress_blocks(
+            words, emax, gtops, c.rate, interpret=_interpret())
+        return zfp_core._uncarve_blocks(blocks[:nb], c.shape)
+    return zfp_core.decompress(c)
 
 
 # ---------------------------------------------- compressed-KV attention ----

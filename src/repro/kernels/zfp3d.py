@@ -13,9 +13,13 @@ Tiling: 256 4x4x4 blocks per grid step -> in tile (256, 4, 4, 4) f32
 * group significance = 10 static masked maxes (groups are a compile-time
   property of the 4x4x4 sequency layout).
 
-The (data-dependent-width) bit packing stays outside: it is a byte-shuffle
-over already-tiny data (rate/32 of the input) and belongs to the jnp layer
-(see DESIGN.md §3 on why Huffman-style stages don't go on the VPU).
+This kernel backs the ``xla`` ZFP path: the embedded coding runs outside in
+the word-level jnp coder (``repro.core.zfp.encode_words``), which costs one
+HBM round-trip of the u32 coefficient planes.  The ``fused`` path
+(``repro.kernels.zfp_fused``) extends this kernel with the same coder traced
+in VMEM so the planes never leave the chip (see DESIGN.md §3 on the
+header-hoisted schedule and why Huffman-style data-dependent-width stages
+don't go on the VPU).
 """
 
 from __future__ import annotations
@@ -28,6 +32,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import zfp as zfp_core
+from repro.kernels import default_interpret
 
 BLOCKS_PER_TILE = 256
 Q = zfp_core.Q
@@ -67,8 +72,14 @@ def _bitlength(u: jax.Array) -> jax.Array:
     return w + (v > 0).astype(jnp.int32)
 
 
-def _zfp_kernel(blocks_ref, u_ref, emax_ref, gtops_ref):
-    b = blocks_ref[...].astype(jnp.float32)  # (T, 4, 4, 4)
+def block_float_negabinary(blocks: jax.Array):
+    """Stages 1-3 on a (T, 4, 4, 4) f32 tile: -> (u index-order uint32[T, 64],
+    e i32[T], nonzero bool[T]).  One shared implementation of the bit-exact
+    arithmetic (IEEE exponent-bit exponent/scale, lift, negabinary) traced by
+    both this transform kernel and the fused encode kernel
+    (``repro.kernels.zfp_fused``) — the cross-path byte-identity contract
+    hangs on these stages never diverging."""
+    b = blocks.astype(jnp.float32)  # (T, 4, 4, 4)
     maxabs = jnp.max(jnp.abs(b), axis=(1, 2, 3))  # (T,)
     bits = jax.lax.bitcast_convert_type(maxabs, jnp.uint32)
     e_biased = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
@@ -84,6 +95,11 @@ def _zfp_kernel(blocks_ref, u_ref, emax_ref, gtops_ref):
     # negabinary, inlined (no captured module constants in a pallas body)
     nbmask = jnp.uint32(0xAAAAAAAA)
     u = (coef.reshape(-1, 64).astype(jnp.uint32) + nbmask) ^ nbmask
+    return u, e, nonzero
+
+
+def _zfp_kernel(blocks_ref, u_ref, emax_ref, gtops_ref):
+    u, e, nonzero = block_float_negabinary(blocks_ref[...])
     lens = _bitlength(u)
     # sequency group of column c (x-fastest index order) from iota arithmetic:
     # deg = (c & 3) + ((c >> 2) & 3) + (c >> 4)
@@ -97,9 +113,13 @@ def _zfp_kernel(blocks_ref, u_ref, emax_ref, gtops_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def zfp3d_transform(blocks: jax.Array, interpret: bool = True):
+def zfp3d_transform(blocks: jax.Array, interpret: bool | None = None):
     """(NB, 4, 4, 4) f32 -> (u32 negabinary coefs [index order], emax i32,
-    per-group top planes i32). NB must be a BLOCKS_PER_TILE multiple."""
+    per-group top planes i32). NB must be a BLOCKS_PER_TILE multiple.
+
+    ``interpret=None`` resolves to interpret-only-off-TPU, so the kernel
+    path is compiled where it matters and emulated elsewhere."""
+    interpret = default_interpret(interpret)
     nb = blocks.shape[0]
     assert nb % BLOCKS_PER_TILE == 0, "pad block count first (ops.py)"
     grid = (nb // BLOCKS_PER_TILE,)

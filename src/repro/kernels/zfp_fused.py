@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: single-pass fused TPU-ZFP encode/decode.
+
+``zfp3d`` fuses stages 1-3 (block-float + lifting + negabinary + header) but
+still writes the uint32 coefficient planes — 4 B/pt, a full copy of the
+input — back to HBM for the XLA coder to re-read.  This module extends that
+kernel with the plane-parallel word-level embedded coder from
+``repro.core.zfp`` so the whole compression pipeline runs in one VMEM tile
+pass and only the ``rate``-bit stream (+ 11 header bytes per 64 values)
+leaves the chip:
+
+  =============================  ==================================
+  stage                          HBM traffic per point
+  =============================  ==================================
+  unfused: transform kernel      read f32 4 B + write u32 coefs 4 B
+  unfused: XLA coder             read coefs 4 B + write rate/8 B
+  -----------------------------  ----------------------------------
+  unfused total                  ~12 + rate/8 B/pt
+  fused encode kernel            read f32 4 B + write rate/8 B
+  fused decode kernel            read rate/8 B + write f32 4 B
+  =============================  ==================================
+
+(The 4x4x4 block carve outside the kernel is an f32 transpose shared by all
+paths; see DESIGN.md §3.)
+
+The coder body is *the same code* as the XLA path: the kernel calls
+``zfp_core._encode_words_impl`` / ``_extract_coeffs`` — pure elementwise,
+slice and 32x32-bit-transpose jnp that Pallas traces into the kernel — so
+the three paths (core / xla / fused) emit byte-identical streams by
+construction.  The only formulation difference is the decode word fetch:
+the XLA path gathers each plane's 3 stream words from the flat buffer,
+while the kernel (no dynamic gathers on the VPU) selects them with a
+one-hot masked OR over the block's ``wpb`` words — ``wpb`` is static
+(``ceil((rate*64 - 58) / 32)`` = ``2*rate - 1`` words per block, the 58-bit
+header living outside the word array), so this is an unrolled
+O(words-per-block) loop, mirroring ``sz_fused._unpack_blocks``.
+
+The kernels TARGET TPU; this container validates them in interpret mode
+(no TPU), which is how the byte-identity tests run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import zfp as zfp_core
+from repro.kernels import default_interpret as _default_interpret
+from repro.kernels import zfp3d as _zfp3d
+
+BLOCKS_PER_TILE = 256  # matches zfp3d; largest live tile array is (256, 64) u32
+N_GROUPS = zfp_core.N_GROUPS
+
+
+def _transform_tile(blocks: jax.Array):
+    """Stages 1-3 on a (T, 4, 4, 4) f32 tile -> (u sequency order, emax i32,
+    gtops i32): the shared ``zfp3d.block_float_negabinary`` arithmetic
+    followed by the static sequency permutation."""
+    u_idx, e, nonzero = _zfp3d.block_float_negabinary(blocks)
+    # static permutation to sequency order (unit slices — Pallas-safe)
+    u = zfp_core._take_static(u_idx, zfp_core.PERM)
+    lens = zfp_core._bitlength32(u)
+    # In sequency order the groups are contiguous static segments, so the
+    # per-group significance is 10 static slice-maxes.
+    tops = []
+    for g in range(N_GROUPS):
+        s0, sz = int(zfp_core._gstart[g]), int(zfp_core.GROUP_SIZES[g])
+        tops.append(jnp.max(lens[:, s0:s0 + sz], axis=1))
+    gtops = jnp.stack(tops, axis=1) * nonzero.astype(jnp.int32)[:, None]
+    emax = jnp.where(nonzero, e + 128, 0).astype(jnp.int32)
+    return u, emax, gtops
+
+
+def _fused_encode_kernel(blocks_ref, words_ref, emax_ref, gtops_ref, *, rate):
+    u, emax, gtops = _transform_tile(blocks_ref[...])
+    words_ref[...] = zfp_core._encode_words_impl(u, gtops, rate)
+    emax_ref[...] = emax
+    gtops_ref[...] = gtops
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "interpret"))
+def fused_compress_blocks(blocks: jax.Array, rate: int,
+                          interpret: bool | None = None):
+    """One fused pass: (NB, 4, 4, 4) f32 blocks -> (words u32[NB, wpb],
+    emax i32[NB], gtops i32[NB, 10]).  NB must be a BLOCKS_PER_TILE
+    multiple (pad in ops.py); coefficients never leave VMEM."""
+    nb = blocks.shape[0]
+    assert nb % BLOCKS_PER_TILE == 0, "pad block count first (ops.py)"
+    wpb = zfp_core.payload_words(rate)
+    t = BLOCKS_PER_TILE
+    grid = (nb // t,)
+    words, emax, gtops = pl.pallas_call(
+        functools.partial(_fused_encode_kernel, rate=rate),
+        out_shape=(
+            jax.ShapeDtypeStruct((nb, wpb), jnp.uint32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, N_GROUPS), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, 4, 4, 4), lambda i: (i, 0, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((t, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t, N_GROUPS), lambda i: (i, 0)),
+        ),
+        interpret=_default_interpret(interpret),
+    )(blocks)
+    return words, emax, gtops
+
+
+def _fused_decode_kernel(words_ref, emax_ref, gtops_ref, blocks_ref, *, rate):
+    budget = rate * 64 - zfp_core._HEADER_BITS
+    words = words_ref[...]  # (T, wpb)
+    wpb = words.shape[1]
+    gtops = gtops_ref[...].astype(jnp.int32)
+    OFF, keep = zfp_core._plane_offsets(gtops, budget)
+    w0 = OFF >> 5
+    # One-hot fetch of the 3 words each plane payload spans (no dynamic
+    # gathers on the VPU; wpb is static so the loop unrolls).
+    zero = jnp.zeros_like(OFF).astype(jnp.uint32)
+    g0, g1, g2 = zero, zero, zero
+    for j in range(wpb):
+        wj = words[:, j][:, None]
+        g0 = g0 | jnp.where(w0 == j, wj, jnp.uint32(0))
+        g1 = g1 | jnp.where(w0 + 1 == j, wj, jnp.uint32(0))
+        g2 = g2 | jnp.where(w0 + 2 == j, wj, jnp.uint32(0))
+    u = zfp_core._extract_coeffs(g0, g1, g2, OFF, keep, gtops)
+    u_idx = zfp_core._take_static(u, zfp_core.IPERM)
+    blocks_ref[...] = zfp_core._blocks_from_indexed(u_idx, emax_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "interpret"))
+def fused_decompress_blocks(words: jax.Array, emax: jax.Array,
+                            gtops: jax.Array, rate: int,
+                            interpret: bool | None = None) -> jax.Array:
+    """Inverse fused pass: stream + headers -> (NB, 4, 4, 4) f32 blocks.
+    The coefficient planes are reconstructed and inverted entirely in VMEM."""
+    nb = words.shape[0]
+    assert nb % BLOCKS_PER_TILE == 0, "pad block count first (ops.py)"
+    wpb = zfp_core.payload_words(rate)
+    assert words.shape[1] == wpb, f"stream has {words.shape[1]} words/block, rate {rate} needs {wpb}"
+    t = BLOCKS_PER_TILE
+    grid = (nb // t,)
+    return pl.pallas_call(
+        functools.partial(_fused_decode_kernel, rate=rate),
+        out_shape=jax.ShapeDtypeStruct((nb, 4, 4, 4), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t, N_GROUPS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, 4, 4, 4), lambda i: (i, 0, 0, 0)),
+        interpret=_default_interpret(interpret),
+    )(words, emax.astype(jnp.int32), gtops.astype(jnp.int32))

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 SINGLE_POD = (16, 16)  # 256 chips (one v5e pod slice)
 MULTI_POD = (2, 16, 16)  # 2 pods = 512 chips
 
@@ -16,15 +18,13 @@ MULTI_POD = (2, 16, 16)  # 2 pods = 512 chips
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever this host has (tests / examples): 1-D data mesh."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), ("data",))
 
 
 def describe(mesh: jax.sharding.Mesh) -> str:

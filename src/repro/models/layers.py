@@ -336,16 +336,15 @@ def constrain_batch(x: jax.Array) -> jax.Array:
     vocab-sharded table make GSPMD drop the batch sharding of the residual
     stream, which replicates *all* downstream attention — this constraint is
     the fix. No-op outside a mesh context or when batch doesn't divide."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return x
     # only constrain over axes still under GSPMD control — inside a
     # partial-manual shard_map (e.g. the compressed-gradient pod hop) the
     # manual axes must not appear in sharding constraints
-    auto = {
-        name for name, t in zip(mesh.axis_names, mesh.axis_types)
-        if t == jax.sharding.AxisType.Auto
-    }
+    auto = compat.auto_axis_names(mesh)
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape and a in auto)
     if not axes:
         return x

@@ -27,11 +27,12 @@ from repro.models.transformer import DenseLM, lm_loss, stack_specs
 
 def _constrain_experts(x: jax.Array) -> jax.Array:
     """Shard dim 0 (experts) over the EP/model axis when divisible."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.shape:
         return x
-    auto = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-            if t == jax.sharding.AxisType.Auto}
+    auto = compat.auto_axis_names(mesh)
     tp = mesh.shape["model"]
     if "model" not in auto or tp <= 1 or x.shape[0] % tp != 0:
         return x

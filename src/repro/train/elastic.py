@@ -34,9 +34,9 @@ def degraded_mesh_shape(old: dict[str, int], lost_pods: int = 0,
 
 
 def make_degraded_mesh(shape: dict[str, int]) -> jax.sharding.Mesh:
-    axes = tuple(shape.keys())
-    return jax.make_mesh(tuple(shape.values()), axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro import compat
+
+    return compat.make_mesh(tuple(shape.values()), tuple(shape.keys()))
 
 
 def reshard_state(state: Any, model, new_mesh: jax.sharding.Mesh,

@@ -97,9 +97,10 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
     def _micro_constraint(mb):
         # inside the compressed-gradient shard_map the pod axis is Manual —
         # constraints may only name axes still under GSPMD (Auto) control
-        am = jax.sharding.get_abstract_mesh()
-        auto = {n for n, t in zip(am.axis_names, am.axis_types)
-                if t == jax.sharding.AxisType.Auto} if am is not None else set()
+        from repro import compat
+
+        am = compat.get_abstract_mesh()
+        auto = compat.auto_axis_names(am)
         axes = tuple(a for a in ("pod", "data") if a in mesh.shape and a in auto)
         first = axes if len(axes) > 1 else (axes[0] if axes else None)
 
