@@ -44,6 +44,7 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
         "zfp_stage_breakdown": throughput.zfp_stage_breakdown(n=n),
         "modeled_tpu": throughput.modeled_tpu_kernel_throughput(),
         "packer": throughput.packer_microbench(n=1 << 18 if smoke else 1 << 22),
+        "dist": throughput.dist_wire_bytes(n=1 << 18 if smoke else 1 << 22),
     }
     if not smoke:
         record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
@@ -73,6 +74,7 @@ def main() -> None:
         for r in record["modeled_tpu"]:
             print(r)
         print(record["packer"])
+        print("dist:", record["dist"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         return
@@ -112,6 +114,7 @@ def main() -> None:
     for r in record["throughput_vs_bitrate"]:
         print(r)
     print(record["packer"])
+    print("dist:", record["dist"])
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

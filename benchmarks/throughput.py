@@ -155,6 +155,37 @@ def packer_microbench(n: int = 1 << 22):
     return {"n_codes": n, "pack_mbs": mb / t_p, "unpack_mbs": mb / t_u}
 
 
+def dist_wire_bytes(n: int = 1 << 20):
+    """repro.dist section: cross-pod gradient wire accounting (analytic,
+    exact by construction) + measured quantize/dequantize throughput of the
+    blockwise int8/int4 codec the compressed collectives put on the DCN."""
+    from repro.dist import collectives as C
+
+    rows = {"bytes_per_param": {}, "format_savings_x": {},
+            "device_savings_x_2pod": {}}
+    cfg_off = C.GradCompressionConfig(enabled=False)
+    off = C.wire_bytes_per_param(cfg_off)
+    rows["bytes_per_param"]["off"] = off
+    n_ref = 1_000_000
+    dev_off = C.pod_hop_device_bytes(cfg_off, n_ref, n_pods=2)
+    for bits in (8, 4):
+        cfg = C.GradCompressionConfig(enabled=True, bits=bits)
+        on = C.wire_bytes_per_param(cfg)
+        rows["bytes_per_param"][f"int{bits}"] = on
+        rows["format_savings_x"][f"int{bits}"] = round(off / on, 2)
+        rows["device_savings_x_2pod"][f"int{bits}"] = round(
+            dev_off / C.pod_hop_device_bytes(cfg, n_ref, n_pods=2), 2)
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    q = jax.jit(lambda x: C._quantize_blockwise(x, 8))
+    t_q, (codes, scale) = _time(lambda: q(g))
+    dq = jax.jit(lambda c, s: C._dequantize_blockwise(c, s, n))
+    t_d, _ = _time(lambda: dq(codes, scale))
+    mb = n * 4 / 1e6
+    rows["codec"] = {"n": n, "quantize_mbs": mb / t_q, "dequantize_mbs": mb / t_d}
+    return rows
+
+
 def throughput_vs_bitrate(n: int = 48):
     """Fig 10 analogue: overall throughput (kernel + transfer) vs bitrate."""
     field = jnp.asarray(cosmo.nyx_fields(n=n)["temperature"])

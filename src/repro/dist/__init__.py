@@ -1,0 +1,27 @@
+"""repro.dist — the distribution substrate.
+
+Two halves, mirroring the storage-side compressor split:
+
+* :mod:`repro.dist.sharding` — logical-axis → ``PartitionSpec`` inference.
+  Models declare per-parameter logical axes (``repro.models.spec.P``); this
+  module maps them onto whatever device mesh the launcher built, with
+  divisibility fallbacks so the same architecture runs on a 4-chip host and
+  a 512-chip two-pod slice without per-arch sharding tables.
+
+* :mod:`repro.dist.collectives` — compressed cross-pod collectives.  The
+  paper's thesis (lossy compression pays wherever data movement dominates)
+  applied to the slowest link in the system: the inter-pod DCN.  Gradients
+  cross it as block-wise int8/int4 codes with error-feedback, ~8x fewer
+  wire bytes than the f32 ring all-reduce they replace.
+
+Importing this package installs the :mod:`repro.compat` jax polyfills, so
+callers (and tests) can use the current-jax mesh API on the 0.4.x line.
+"""
+
+from repro import compat as _compat
+
+_compat.install()
+
+from repro.dist import collectives, sharding  # noqa: E402,F401
+
+__all__ = ["collectives", "sharding"]

@@ -1,0 +1,107 @@
+"""Logical-axis sharding: map model-declared axis names onto mesh axes.
+
+Every parameter in ``repro.models.spec`` carries a tuple of *logical* axis
+names (``("embed", "mlp")``); the mesh carries *physical* axis names
+(``("pod", "data", "model")``).  ``DEFAULT_RULES`` is the single table that
+connects them — megatron-style tensor parallelism over ``model``, FSDP-style
+parameter sharding over ``data``, batch over the composed ``("pod", "data")``
+data-parallel axes.
+
+Inference rules (pinned by ``tests/test_dist.py::TestSpecFor``):
+
+* **divisibility fallback** — a dimension only shards over a mesh axis (or
+  composed axis tuple) that divides it exactly; otherwise the composed tuple
+  is shortened from the right, and if nothing fits the dimension replicates.
+  This is what lets starcoder2's 24 heads run on a 16-wide model axis
+  (heads replicate, embed still shards).
+* **no axis reuse per array** — a mesh axis may appear at most once in one
+  array's spec; the left-most dimension wins and later claimants replicate
+  (MoE: ``experts`` takes ``model``, the expert-local ``mlp`` replicates).
+* **missing mesh axes are ignored** — rules that name an absent axis map to
+  replication, so host meshes (``("data",)``) need no special casing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+# logical axis -> mesh axis (str), composed mesh axes (tuple, outer first),
+# or None (never sharded).  Explicit Nones document intent; unknown logical
+# names also replicate.
+DEFAULT_RULES: Mapping[str, Union[str, tuple, None]] = {
+    "batch": ("pod", "data"),  # data parallelism composes across pods
+    "embed": "data",  # FSDP: params + optimizer state over the data axis
+    "mlp": "model",  # megatron TP: hidden/ffn/vocab over the model axis
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "vocab": "model",
+    "seq": None,
+    "head_dim": None,
+    "layers": None,
+}
+
+BATCH_AXES = ("pod", "data")
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh,
+             rules: Mapping = DEFAULT_RULES) -> PS:
+    """Infer the PartitionSpec for one array.
+
+    ``mesh`` may be a concrete ``Mesh`` or an ``AbstractMesh`` (spec math
+    needs only axis names/sizes, not devices).  Trailing replicated
+    dimensions are trimmed so specs compare equal regardless of rank.
+    """
+    sizes = dict(mesh.shape)
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, axes):
+        target = rules.get(name) if name is not None else None
+        if isinstance(target, str):
+            target = (target,)
+        entry = None
+        if target:
+            cand = tuple(a for a in target if a in sizes and a not in used)
+            # divisibility fallback: shorten the composed tuple from the
+            # right (drop the innermost axis first) until it divides
+            while cand:
+                extent = math.prod(sizes[a] for a in cand)
+                if extent > 1 and dim % extent == 0:
+                    entry = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+                cand = cand[:-1]
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PS(*entries)
+
+
+def tree_shardings(axes_tree: Any, abs_tree: Any, mesh,
+                   rules: Mapping = DEFAULT_RULES) -> Any:
+    """NamedSharding tree for a parameter pytree.
+
+    ``axes_tree`` is the ``logical_axes`` tree (leaves are tuples of axis
+    names), ``abs_tree`` the matching ShapeDtypeStruct/array tree.
+    """
+    flat_abs, treedef = jax.tree_util.tree_flatten(abs_tree)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten([
+        NamedSharding(mesh, spec_for(a.shape, ax, mesh, rules))
+        for a, ax in zip(flat_abs, flat_axes)
+    ])
+
+
+def batch_sharding(mesh, rank: int = 2) -> NamedSharding:
+    """Batch-dim-0 sharding over the composed data-parallel axes present in
+    the mesh (replicated when there are none, e.g. a pure-model mesh)."""
+    axes = tuple(a for a in BATCH_AXES if a in dict(mesh.shape))
+    if not axes:
+        return NamedSharding(mesh, PS())
+    first = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, PS(first, *([None] * (rank - 1))))

@@ -1,10 +1,12 @@
 import os
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
-    + os.environ.get("XLA_FLAGS", "")
-)
+if __name__ == "__main__":
+    # entry-point only — see the matching guard in dryrun.py
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 """Honest roofline costing (companion to dryrun.py).
 
@@ -61,6 +63,8 @@ LINEAR_FAMILIES = {"ssm", "hybrid"}
 def _cost_of(lowered) -> dict:
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

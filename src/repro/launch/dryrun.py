@@ -1,16 +1,20 @@
 import os
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    # XLA:CPU's while-loop-invariant-code-motion hoists a *wholesale f32
-    # convert* of the bf16 remat-carry stash out of the backward loop
-    # (trading 2x stash memory to avoid per-iteration converts — sensible
-    # for CPU caches, catastrophic for HBM accounting). The TPU pipeline is
-    # driven by an HBM-aware scheduler instead; disabling the pass here
-    # makes the CPU dry-run's memory_analysis() faithful to the TPU target.
-    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
-    + os.environ.get("XLA_FLAGS", "")
-)
+if __name__ == "__main__":
+    # Entry-point only: forcing 512 host devices must happen before jax
+    # initializes, and must NOT leak into processes that merely import this
+    # module for collective_bytes / run_cell (tests, costrun, benchmarks).
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        # XLA:CPU's while-loop-invariant-code-motion hoists a *wholesale f32
+        # convert* of the bf16 remat-carry stash out of the backward loop
+        # (trading 2x stash memory to avoid per-iteration converts — sensible
+        # for CPU caches, catastrophic for HBM accounting). The TPU pipeline is
+        # driven by an HBM-aware scheduler instead; disabling the pass here
+        # makes the CPU dry-run's memory_analysis() faithful to the TPU target.
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 """Multi-pod dry-run: prove the distribution config is coherent without
 hardware.
@@ -177,6 +181,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         n_dev = mesh.devices.size
@@ -200,6 +206,34 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
         cell["peak_bytes_per_device"] = int(peak)
         cell["fits_16gb"] = bool(peak < 16 * 2**30)
+        if shape.kind == "train":
+            # cross-pod gradient wire accounting, with vs without the
+            # compressed hop (paper thesis applied to the DCN: the savings
+            # figure is what justifies the int8 wire format)
+            from repro.dist.collectives import (GradCompressionConfig,
+                                                pod_hop_device_bytes,
+                                                wire_bytes_per_param)
+            from repro.models.spec import param_count
+
+            n_params = param_count(model.specs())
+            n_pods = mesh.shape.get("pod", 1)
+            gc_off = GradCompressionConfig(enabled=False)
+            gc_on = GradCompressionConfig(enabled=True)
+            bpp_off = wire_bytes_per_param(gc_off)
+            bpp_on = wire_bytes_per_param(gc_on)
+            dev_off = pod_hop_device_bytes(gc_off, n_params, n_pods)
+            dev_on = pod_hop_device_bytes(gc_on, n_params, n_pods)
+            cell["grad_wire"] = {
+                "params": n_params,
+                "n_pods": n_pods,
+                # per-crossing wire format (pod-count-independent)
+                "bytes_per_param": {"off": bpp_off, "on": bpp_on},
+                "format_savings_x": round(bpp_off / bpp_on, 2),
+                # aggregate per-device DCN bytes at this topology
+                "device_hop_bytes": {"off": dev_off, "on": dev_on},
+                "device_savings_x": round(dev_off / dev_on, 2) if dev_on else None,
+                "grad_comp_lowered": bool(grad_comp and multi_pod),
+            }
         if verbose:
             print(f"[{arch} x {shape_name} x {mesh_name}] OK in {cell['compile_s']}s  "
                   f"flops/dev={cell['flops_per_device']:.3e}  "
@@ -207,6 +241,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             print("  memory_analysis:", cell["memory"])
             print("  cost_analysis: flops=%.3e bytes=%.3e" %
                   (cell["flops_per_device"], cell["bytes_accessed_per_device"]))
+            print("  collective_bytes/dev:",
+                  "  ".join(f"{k}={v/2**20:.2f}MiB" for k, v in coll.items()))
+            if "grad_wire" in cell:
+                gw = cell["grad_wire"]
+                print(f"  grad wire ({gw['params']/1e6:.1f}M params, "
+                      f"{gw['n_pods']} pods): format {gw['bytes_per_param']['off']}"
+                      f"->{gw['bytes_per_param']['on']:.3f} B/param "
+                      f"({gw['format_savings_x']}x); per-device hop "
+                      f"{gw['device_hop_bytes']['off']/2**20:.1f}MiB -> "
+                      f"{gw['device_hop_bytes']['on']/2**20:.1f}MiB "
+                      f"({gw['device_savings_x']}x, lowered={gw['grad_comp_lowered']})")
     except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
         cell["status"] = "error"
         cell["error"] = f"{type(e).__name__}: {e}"

@@ -4,8 +4,18 @@
     (state, batch) -> (state, metrics)
 with in/out shardings derived from the model's logical axes, remat applied
 to the scanned layer stack, and (optionally) the compressed cross-pod
-gradient hop from ``repro.dist.collectives`` wired in via a partial-manual
-shard_map (manual over "pod", GSPMD-auto over data/model).
+gradient hop from ``repro.dist.collectives`` wired in.
+
+The compressed hop is manual over "pod" and GSPMD-auto over data/model: the
+batch is stacked ``(n_pods, B/n_pods, ...)`` with the leading axis pinned
+to "pod", a vmapped backward pass yields per-pod gradients in the same
+layout, and ``collectives.compressed_pod_mean_stacked`` exchanges them as
+int8 codes (one s8 all-gather in the partitioned HLO).  This GSPMD
+formulation is equivalent to a partial-manual shard_map around the loss —
+and is the one XLA's 0.4.x partitioner can actually compile: lax.scan (the
+layer stack) and all-gather both CHECK-fail inside partial-auto shard_map
+regions there, while vmap + resharding constraints lower cleanly on every
+line.
 
 ``build_serve_step`` returns (params, cache, token, index) -> (logits, cache).
 """
@@ -52,10 +62,17 @@ def make_state_specs(model, mesh, rules=sharding.DEFAULT_RULES,
     state_shard = {"params": p_shard,
                    "opt": {"m": p_shard, "v": p_shard,
                            "step": NamedSharding(mesh, PS())}}
-    if step_cfg.grad_comp.enabled and step_cfg.grad_comp.error_feedback:
-        ef_abs = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), p_abs)
+    if (step_cfg.grad_comp.enabled and step_cfg.grad_comp.error_feedback
+            and "pod" in mesh.shape):
+        # error feedback is per-pod state: stacked (n_pods, *param) bf16,
+        # leading axis on "pod" so each pod keeps only its own residual
+        # (meshes without a pod axis have no compressed hop and no ef)
+        n_pods = mesh.shape["pod"]
+        ef_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, jnp.bfloat16), p_abs)
         state_abs["ef"] = ef_abs
-        state_shard["ef"] = p_shard
+        state_shard["ef"] = jax.tree.map(
+            lambda sh: NamedSharding(mesh, PS("pod", *sh.spec)), p_shard)
     return state_abs, state_shard
 
 
@@ -65,8 +82,11 @@ def init_state(model, mesh, key, rules=sharding.DEFAULT_RULES,
 
     params = init_params(model.specs(), key, step_cfg.param_dtype)
     state = {"params": params, "opt": adamw.init_state(params)}
-    if step_cfg.grad_comp.enabled and step_cfg.grad_comp.error_feedback:
-        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    if (step_cfg.grad_comp.enabled and step_cfg.grad_comp.error_feedback
+            and "pod" in mesh.shape):
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros((mesh.shape["pod"],) + p.shape, jnp.bfloat16),
+            params)
     _, state_shard = make_state_specs(model, mesh, rules, step_cfg)
     return jax.device_put(state, state_shard)
 
@@ -94,14 +114,16 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
         extras = [batch[k] for k in extra_keys]
         return model.loss(params, batch["tokens"], batch["labels"], *extras)
 
-    def _micro_constraint(mb):
-        # inside the compressed-gradient shard_map the pod axis is Manual —
-        # constraints may only name axes still under GSPMD (Auto) control
+    def _micro_constraint(mb, include_pod=True):
+        # constraints may only name axes still under GSPMD (Auto) control;
+        # inside the per-pod vmap lane of the compressed-gradient path the
+        # microbatch has no pod dim, so "pod" must not be pinned there
         from repro import compat
 
         am = compat.get_abstract_mesh()
         auto = compat.auto_axis_names(am)
-        axes = tuple(a for a in ("pod", "data") if a in mesh.shape and a in auto)
+        names = ("pod", "data") if include_pod else ("data",)
+        axes = tuple(a for a in names if a in mesh.shape and a in auto)
         first = axes if len(axes) > 1 else (axes[0] if axes else None)
 
         def con(x):
@@ -112,7 +134,7 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
 
         return jax.tree.map(con, mb)
 
-    def grads_of(params, batch):
+    def grads_of(params, batch, include_pod=True):
         k = step_cfg.microbatches
         if k <= 1:
             return jax.value_and_grad(loss_fn)(params, batch)
@@ -122,7 +144,7 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
 
         def mb_step(carry, mb):
             acc_loss, acc_g = carry
-            mb = _micro_constraint(mb)
+            mb = _micro_constraint(mb, include_pod)
             l, g = jax.value_and_grad(loss_fn)(params, mb)
             acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
             return (acc_loss + l, acc_g), None
@@ -131,23 +153,31 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
         (loss, g), _ = jax.lax.scan(mb_step, (jnp.float32(0.0), zero), micro)
         return loss / k, jax.tree.map(lambda x: x / k, g)
 
+    def _pin_pod_batch(pb):
+        # stacked batch: dim 0 is pods (manual intent), dim 1 the per-pod
+        # batch re-pinned over data so GSPMD keeps intra-pod parallelism
+        d = mesh.shape.get("data", 1)
+
+        def con(x):
+            inner = "data" if (x.ndim >= 2 and d > 1 and x.shape[1] % d == 0) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, PS("pod", inner, *([None] * (x.ndim - 2)))))
+
+        return jax.tree.map(con, pb)
+
     def train_step(state, batch):
         if gc.enabled and has_pod:
-            def per_pod(params, ef, pod_batch):
-                loss, grads = grads_of(params, pod_batch)
-                loss = jax.lax.pmean(loss, "pod")
-                grads, new_ef = collectives.compressed_pod_mean(
-                    grads, gc, ef if gc.error_feedback else None, n_pods)
-                return loss, grads, new_ef
-
-            batch_spec = jax.tree.map(lambda _: PS("pod"), batch)
-            ef = state.get("ef")
-            loss, grads, new_ef = jax.shard_map(
-                per_pod, mesh=mesh,
-                in_specs=(PS(), PS(), batch_spec),
-                out_specs=(PS(), PS(), PS()),
-                axis_names=frozenset({"pod"}), check_vma=False,
-            )(state["params"], ef, batch)
+            pod_batch = jax.tree.map(
+                lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+                batch)
+            pod_batch = _pin_pod_batch(pod_batch)
+            params = state["params"]
+            losses, pod_grads = jax.vmap(
+                lambda pb: grads_of(params, pb, include_pod=False))(pod_batch)
+            loss = losses.mean()
+            ef = state.get("ef") if gc.error_feedback else None
+            grads, new_ef = collectives.compressed_pod_mean_stacked(
+                pod_grads, gc, ef, mesh)
         else:
             loss, grads = grads_of(state["params"], batch)
             new_ef = None
@@ -163,11 +193,10 @@ def build_train_step(model, mesh, rules=sharding.DEFAULT_RULES,
 
     def batch_shardings(batch_abs):
         if gc.enabled and has_pod:
-            # entering the manual-pod shard_map from a (pod, data)-sharded
-            # batch makes XLA's partitioner reshard through a path that
-            # CHECK-fails at high device counts; pod-only batch sharding at
-            # the jit boundary sidesteps it (data sharding is re-pinned
-            # inside via the microbatch constraint).
+            # pod-only batch sharding at the jit boundary keeps the
+            # (B, ...) -> (n_pods, B/n_pods, ...) stacking reshape local
+            # (pod-major slicing); data sharding is re-pinned on dim 1 by
+            # _pin_pod_batch after the reshape.
             return jax.tree.map(
                 lambda s: NamedSharding(mesh, PS("pod", *([None] * (len(s.shape) - 1)))),
                 batch_abs)

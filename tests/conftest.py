@@ -1,0 +1,3 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (forced host device counts)")

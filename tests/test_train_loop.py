@@ -5,9 +5,6 @@ device counts (jax locks the device count at first init)."""
 
 import pytest
 
-# repro.dist substrate is not in the seed tree yet (pre-existing gap)
-pytest.importorskip("repro.dist")
-
 import json
 import os
 import subprocess
