@@ -100,6 +100,52 @@ def analyze_cell(path: Path) -> dict | None:
     }
 
 
+def _insitu_ratios() -> dict:
+    """Measured in-situ compression ratios from the committed throughput
+    record (the `insitu` section `benchmarks.throughput` writes); falls back
+    to the paper-regime defaults when the record predates the section."""
+    bench = Path(__file__).resolve().parents[1] / "BENCH_throughput.json"
+    try:
+        sec = json.loads(bench.read_text())["insitu"]
+        return {k: float(v["ratio"]) for k, v in sec.items()}
+    except (FileNotFoundError, KeyError, ValueError):
+        return {"sz": 5.0, "zfp": 4.0}
+
+
+def insitu_snapshot_terms(mesh: str = "single") -> list[dict]:
+    """Snapshot-cost roofline terms per (arch x shape): gathered vs in-situ.
+
+    A *gathered* snapshot ships every device's raw f32 state shard across
+    the slowest link (DCN on multi-pod, ICI/PCIe otherwise) before anything
+    compresses.  The *in-situ* path (`repro.dist.insitu`) reads the shard
+    from HBM, compresses on-device, and ships only the stream — so the link
+    term shrinks by the measured compression ratio and the HBM term (one
+    read + one compressed write) is what remains.  Both are seconds per
+    snapshot per device; the savings factor is link-bound whenever
+    HBM_bw >> link_bw, i.e. essentially the compression ratio.
+    """
+    ratios = _insitu_ratios()
+    link = DCN_BW if mesh == "multi" else ICI_BW
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        cell = json.loads(f.read_text())
+        if cell.get("status") != "ok":
+            continue
+        cfg = registry.get_config(cell["arch"])
+        total, _ = param_count(cfg)
+        per_dev = total * 4.0 / cell["n_devices"]  # f32 state bytes / device
+        t_gather = per_dev / link
+        for codec, cr in sorted(ratios.items()):
+            t_insitu = per_dev / HBM_BW + (per_dev / cr) * (1.0 / HBM_BW + 1.0 / link)
+            rows.append({
+                "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+                "codec": codec, "state_bytes_per_dev": per_dev, "insitu_ratio": cr,
+                "snapshot_gathered_s": t_gather, "snapshot_insitu_s": t_insitu,
+                "snapshot_savings_x": t_gather / t_insitu,
+            })
+    return rows
+
+
 def run(mesh: str = "single") -> list[dict]:
     rows = []
     for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
@@ -123,6 +169,15 @@ def main() -> None:
             print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
                   f"{r['collective_s']:.4f},{r['dominant']},{r['useful_compute_ratio']:.3f},"
                   f"{r['roofline_fraction']:.3f},{r['peak_gib']:.2f},{r['fits_16gb']}")
+        snap = insitu_snapshot_terms(mesh)
+        if snap:
+            print(f"## in-situ snapshot terms ({mesh}-pod), seconds/snapshot per chip")
+            print("arch,shape,codec,state_MiB_dev,gathered_s,insitu_s,savings_x")
+            for r in snap:
+                print(f"{r['arch']},{r['shape']},{r['codec']},"
+                      f"{r['state_bytes_per_dev'] / 2**20:.1f},"
+                      f"{r['snapshot_gathered_s']:.4f},{r['snapshot_insitu_s']:.4f},"
+                      f"{r['snapshot_savings_x']:.2f}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
         "modeled_tpu": throughput.modeled_tpu_kernel_throughput(),
         "packer": throughput.packer_microbench(n=1 << 18 if smoke else 1 << 22),
         "dist": throughput.dist_wire_bytes(n=1 << 18 if smoke else 1 << 22),
+        "insitu": throughput.insitu_snapshot(n=n),
     }
     if not smoke:
         record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
@@ -75,6 +76,7 @@ def main() -> None:
             print(r)
         print(record["packer"])
         print("dist:", record["dist"])
+        print("insitu:", record["insitu"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         return
@@ -115,6 +117,7 @@ def main() -> None:
         print(r)
     print(record["packer"])
     print("dist:", record["dist"])
+    print("insitu:", record["insitu"])
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

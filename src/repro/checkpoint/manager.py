@@ -25,6 +25,13 @@ Design points for 1000+ node posture:
     >= 1 MiB, lossless otherwise). The Foresight guideline machinery
     (repro.foresight.guideline) picks bounds that pass a loss-delta gate,
     exactly like the paper picks eb from the pk-ratio gate;
+  * in-situ leaves: a ``dist.insitu.HostShardedStream`` in the state tree
+    is a field that was compressed *on its devices* (halo-exchanged SZ/ZFP
+    per shard) — the manager persists each shard's stream through the same
+    ``leaf_i_sNNN.bin`` writer with an ``insitu-*`` codec tag, charges the
+    ratio against the raw field bytes, and restores via
+    ``insitu.host_restore`` — which needs no mesh, so the decoded field can
+    re-``device_put`` onto a different topology (elastic resharding);
   * keep_last: bounded disk usage; partial writes never corrupt older steps.
 """
 
@@ -142,6 +149,9 @@ def _encode_leaf(arr: np.ndarray, policy: CodecPolicy) -> tuple[bytes, dict]:
 
 def _decode_leaf(payload: bytes, meta: dict) -> np.ndarray:
     if meta.get("zstd"):
+        if _zstd is None:
+            raise IOError("leaf is zstd-compressed but zstandard is not "
+                          "installed on this host")
         payload = _zstd.ZstdDecompressor().decompress(payload)
     dtype = np.dtype(meta["dtype"]) if meta["dtype"] != "bfloat16" else np.dtype("bfloat16")
     shape = tuple(meta["shape"])
@@ -193,8 +203,17 @@ class _ShardedLeaf:
 
 def _to_host(x: Any) -> Any:
     """Device->host without gathering: multi-shard jax.Arrays come back as
-    ``_ShardedLeaf`` (one host block per unique shard index); everything
-    else as a plain np.ndarray."""
+    ``_ShardedLeaf`` (one host block per unique shard index); in-situ
+    pre-compressed leaves (``dist.insitu.HostShardedStream`` — already
+    host-side compressed bytes, never the raw field) pass through;
+    everything else as a plain np.ndarray."""
+    import sys
+
+    ins = sys.modules.get("repro.dist.insitu")
+    if ins is not None and isinstance(x, ins.HostShardedStream):
+        return x  # already host-side compressed bytes; a stream leaf can
+    # only appear in a state tree if its module is loaded, so the guard
+    # keeps plain checkpointing decoupled from the dist import chain
     shards = getattr(x, "addressable_shards", None)
     if shards is None or len(shards) <= 1:
         return np.asarray(x)
@@ -245,8 +264,33 @@ class CheckpointManager:
         tmp.mkdir(parents=True, exist_ok=True)
         manifest: dict[str, Any] = {"step": step, "treedef": treedef_str,
                                     "extra": extra, "leaves": []}
+        import sys
+
+        insitu = sys.modules.get("repro.dist.insitu")
+
         raw = stored = 0
         for i, arr in enumerate(host):
+            if insitu is not None and isinstance(arr, insitu.HostShardedStream):
+                # in-situ compressed on-device: persist each shard's stream
+                # with the per-addressable-shard writer; the codec tag routes
+                # restore through insitu.host_restore (mesh-independent)
+                meta = insitu.host_stream_meta(arr)
+                meta["shards"] = []
+                for j, (idx, blobs) in enumerate(arr.shards):
+                    payload = insitu.shard_payload_encode(blobs)
+                    bmeta: dict[str, Any] = {"index": [list(se) for se in idx]}
+                    if _zstd is not None and self.policy.zstd_level > 0:
+                        payload = _zstd.ZstdCompressor(
+                            level=self.policy.zstd_level).compress(payload)
+                        bmeta["zstd"] = True
+                    (tmp / f"leaf_{i:05d}_s{j:03d}.bin").write_bytes(payload)
+                    bmeta["crc32"] = _crc(payload)
+                    bmeta["stored_bytes"] = len(payload)
+                    meta["shards"].append(bmeta)
+                    stored += len(payload)
+                raw += arr.nbytes_raw
+                manifest["leaves"].append(meta)
+                continue
             if isinstance(arr, _ShardedLeaf):
                 meta: dict[str, Any] = {"shape": list(arr.shape),
                                         "dtype": str(arr.dtype), "shards": []}
@@ -306,6 +350,23 @@ class CheckpointManager:
             raise IOError(f"manifest digest mismatch in {d}")
         host = []
         for i, meta in enumerate(manifest["leaves"]):
+            if meta.get("codec", "").startswith("insitu-"):
+                from repro.dist import insitu
+
+                payloads = []
+                for j, bmeta in enumerate(meta["shards"]):
+                    payload = (d / f"leaf_{i:05d}_s{j:03d}.bin").read_bytes()
+                    if _crc(payload) != bmeta["crc32"]:
+                        raise IOError(f"leaf {i} shard {j} crc mismatch in {d}")
+                    if bmeta.get("zstd"):
+                        if _zstd is None:
+                            raise IOError(
+                                f"leaf {i} shard {j} is zstd-compressed but "
+                                "zstandard is not installed on this host")
+                        payload = _zstd.ZstdDecompressor().decompress(payload)
+                    payloads.append(payload)
+                host.append(insitu.host_restore(meta, payloads))
+                continue
             if "shards" in meta:
                 shape = tuple(meta["shape"])
                 full = np.empty(shape, np.dtype(meta["dtype"]))

@@ -45,23 +45,61 @@ class SZCompressed:
     block_size: int | None  # static; None => global Lorenzo
 
 
-def lorenzo_residual(q: jax.Array) -> jax.Array:
-    """Exact integer Lorenzo residual: d-fold first difference (int32)."""
+def lorenzo_residual(q: jax.Array, exchange=None, ndim: int | None = None) -> jax.Array:
+    """Exact integer Lorenzo residual: d-fold first difference (int32).
+
+    ``exchange`` is the border-override hook for sharded fields: a callable
+    ``(field_axis, last_plane) -> prev_plane | None``.  Before differencing
+    field axis ``a``, the running intermediate's *last* plane along that axis
+    is offered to the hook; a distributed caller (``repro.dist.insitu``)
+    ships it one shard rightward with a collective-permute and returns the
+    plane received from its left neighbor, so the shard's predictor starts
+    from its true left border instead of the implicit zero plane.  ``None``
+    (or no hook) keeps the zero border — the single-device behavior, and the
+    correct one for mesh-edge shards.
+
+    ``ndim`` overrides the number of *field* axes (counted from the right),
+    so the same code runs on a shard-local block inside ``shard_map`` and on
+    a stacked ``(shards..., *local)`` array under a mocked mesh in tests.
+    """
+    nd = q.ndim if ndim is None else ndim
     d = q
-    for axis in range(q.ndim):
-        zero = jnp.zeros_like(jax.lax.slice_in_dim(d, 0, 1, axis=axis))
+    for a in range(nd):
+        axis = a - nd
+        ext = d.shape[axis]
+        last = jax.lax.slice_in_dim(d, ext - 1, ext, axis=axis)
+        prev = exchange(a, last) if exchange is not None else None
+        if prev is None:
+            prev = jnp.zeros_like(last)
         shifted = jnp.concatenate(
-            [zero, jax.lax.slice_in_dim(d, 0, d.shape[axis] - 1, axis=axis)], axis=axis
+            [prev, jax.lax.slice_in_dim(d, 0, ext - 1, axis=axis)], axis=axis
         )
         d = d - shifted
     return d
 
 
-def lorenzo_reconstruct(delta: jax.Array) -> jax.Array:
-    """Inverse Lorenzo: d-fold inclusive prefix sum (exact in int32)."""
+def lorenzo_reconstruct(delta: jax.Array, exchange=None, ndim: int | None = None) -> jax.Array:
+    """Inverse Lorenzo: d-fold inclusive prefix sum (exact in int32).
+
+    ``exchange`` is the reconstruction-side border hook, dual to the one on
+    :func:`lorenzo_residual`: a callable ``(field_axis, local_total_plane) ->
+    carry | None``.  After the local cumsum along field axis ``a``, the hook
+    receives the shard's inclusive total (its last plane) and returns the
+    carry to add — the sum of every left shard's total, i.e. an exclusive
+    cross-shard scan.  int32 addition is associative even under wraparound,
+    so local-cumsum + carry is *bitwise* equal to the global cumsum.
+    ``ndim`` as in :func:`lorenzo_residual`.
+    """
+    nd = delta.ndim if ndim is None else ndim
     q = delta
-    for axis in range(delta.ndim):
+    for a in range(nd):
+        axis = a - nd
         q = jnp.cumsum(q, axis=axis)
+        if exchange is not None:
+            ext = q.shape[axis]
+            carry = exchange(a, jax.lax.slice_in_dim(q, ext - 1, ext, axis=axis))
+            if carry is not None:
+                q = q + carry
     return q
 
 
@@ -89,18 +127,28 @@ def _from_blocks(xb: jax.Array, padded_shape: Sequence[int], shape: Sequence[int
     return xp[tuple(slice(0, s) for s in shape)]
 
 
+def internal_bound(absmax: jax.Array, eb) -> jax.Array:
+    """Internal (guarded) bound from the field's |x|max.
+
+    f32 quantize/dequantize roundoff grows with the quantization range
+    (~|x|max/eb * 2^-24 quanta); SZ-on-doubles never sees this, f32
+    accelerators do. Shrink the internal bound adaptively so the
+    *user-facing* |x_hat - x| <= eb holds for any range/eb <= ~5e6
+    (every paper configuration sits below 2^20).  ``absmax`` is factored out
+    so a sharded caller can pass the pmax-reduced *global* maximum — f32 max
+    is exact under any reduction grouping, so every shard derives the same
+    bound bitwise and per-shard streams stay seam-consistent.
+    """
+    eb = jnp.asarray(eb, jnp.float32)
+    kappa = jnp.clip(absmax / eb * jnp.float32(2.0**-22), 0.0, 0.25)
+    return eb * (jnp.float32(0.995) - kappa)
+
+
 @partial(jax.jit, static_argnames=("block_size",))
 def compress(x: jax.Array, eb, block_size: int | None = None) -> SZCompressed:
     """Error-bounded (ABS mode) compression of a 1-D/2-D/3-D float field."""
-    # f32 quantize/dequantize roundoff grows with the quantization range
-    # (~|x|max/eb * 2^-24 quanta); SZ-on-doubles never sees this, f32
-    # accelerators do. Shrink the internal bound adaptively so the
-    # *user-facing* |x_hat - x| <= eb holds for any range/eb <= ~5e6
-    # (every paper configuration sits below 2^20).
     x = x.astype(jnp.float32)
-    eb = jnp.asarray(eb, jnp.float32)
-    kappa = jnp.clip(jnp.max(jnp.abs(x)) / eb * jnp.float32(2.0**-22), 0.0, 0.25)
-    eb_i = eb * (jnp.float32(0.995) - kappa)
+    eb_i = internal_bound(jnp.max(jnp.abs(x)), eb)
     q = jnp.round(x / (2.0 * eb_i)).astype(jnp.int32)
     if block_size is None:
         delta = lorenzo_residual(q)

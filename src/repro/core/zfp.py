@@ -59,6 +59,25 @@ _NBMASK_VAL = 0xAAAAAAAA  # python int: jnp scalars are built per-call so the
 _EMAX_BIAS = 128  # stored emax = e + bias; 0 reserved for all-zero blocks
 N_GROUPS = 10  # sequency groups: total degree i+j+k in 0..9
 _HEADER_BITS = 8 + 5 * N_GROUPS  # emax + per-group top plane
+BLOCK_SIDE = 4  # ZFP block edge; also the shard-seam alignment quantum
+
+
+def shard_extent_aligned(extent: int, n_shards: int) -> bool:
+    """Whether a field dimension of ``extent`` per shard may be partitioned
+    into ``n_shards`` equal shards without changing the stream.
+
+    ZFP's 4x4x4 blocks are self-contained (no cross-block prediction), so a
+    partitioned field carves exactly the blocks the single-device coder
+    carves *iff* every seam falls on a block boundary — i.e. the per-shard
+    extent is a multiple of :data:`BLOCK_SIDE` whenever the axis is actually
+    split.  A misaligned seam would make both neighbors edge-pad a block the
+    single-device coder fills with real data, silently changing ``emax`` and
+    the stream; ``repro.dist.insitu`` therefore *rejects* misaligned shards
+    instead of approximating (DESIGN.md §7).  The global tail may stay
+    ragged on non-partitioned axes — edge padding there is shard-local and
+    identical to the single-device padding.
+    """
+    return n_shards <= 1 or extent % BLOCK_SIDE == 0
 
 
 def _perm3() -> np.ndarray:

@@ -14,6 +14,13 @@ Two halves, mirroring the storage-side compressor split:
   cross it as block-wise int8/int4 codes with error-feedback, ~8x fewer
   wire bytes than the f32 ring all-reduce they replace.
 
+* :mod:`repro.dist.insitu` — in-situ sharded field compression: TPU-SZ /
+  TPU-ZFP run shard-locally over :mod:`repro.dist.sharding` partitions,
+  with a one-face halo exchange (one ``collective-permute`` per partitioned
+  face) so seams decode bitwise-identically to the single-device path.
+  Snapshots compress where they live; the raw field never crosses the
+  interconnect and never gathers to host.
+
 Importing this package installs the :mod:`repro.compat` jax polyfills, so
 callers (and tests) can use the current-jax mesh API on the 0.4.x line.
 """
@@ -22,6 +29,6 @@ from repro import compat as _compat
 
 _compat.install()
 
-from repro.dist import collectives, sharding  # noqa: E402,F401
+from repro.dist import collectives, insitu, sharding  # noqa: E402,F401
 
-__all__ = ["collectives", "sharding"]
+__all__ = ["collectives", "insitu", "sharding"]

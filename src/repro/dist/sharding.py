@@ -48,6 +48,36 @@ DEFAULT_RULES: Mapping[str, Union[str, tuple, None]] = {
 
 BATCH_AXES = ("pod", "data")
 
+# Cosmology-field logical axes (the in-situ snapshot path,
+# ``repro.dist.insitu``): a 3-D Nyx-style field shards plane-major — the
+# slowest-varying axis over the largest data-parallel extent — and a 1-D
+# HACC particle stream shards over ``data``.  Each field dimension maps to a
+# *single* mesh axis (no composed tuples): the halo machinery ships one
+# face per partitioned axis with one collective-permute, and a composed
+# axis would need a carry-propagating permute chain (DESIGN.md §7).
+FIELD_RULES: Mapping[str, Union[str, tuple, None]] = {
+    "field_z": "pod",
+    "field_y": "data",
+    "field_x": "model",
+    "particles": "data",
+}
+
+FIELD_AXES: Mapping[int, tuple] = {
+    1: ("particles",),
+    2: ("field_y", "field_x"),
+    3: ("field_z", "field_y", "field_x"),
+}
+
+
+def field_spec(shape: Sequence[int], mesh, rules: Mapping = FIELD_RULES) -> PS:
+    """Partition spec for a raw simulation field (1-D/2-D/3-D) — the
+    ``dist.insitu`` default when the caller doesn't pass one.  Same
+    inference rules as :func:`spec_for` (divisibility fallback, absent mesh
+    axes ignored), driven by the :data:`FIELD_RULES` table."""
+    if len(shape) not in FIELD_AXES:
+        raise ValueError(f"fields are 1-D/2-D/3-D, got shape {tuple(shape)}")
+    return spec_for(shape, FIELD_AXES[len(shape)], mesh, rules)
+
 
 def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh,
              rules: Mapping = DEFAULT_RULES) -> PS:

@@ -49,10 +49,10 @@ TILE = (8, 64, 128)
 
 def guarded_eb(x: jax.Array, eb) -> jax.Array:
     """Internal bound: user eb shrunk for f32 quantize/dequantize roundoff
-    (identical policy to repro.core.sz.compress)."""
-    eb = jnp.asarray(eb, jnp.float32)
-    kappa = jnp.clip(jnp.max(jnp.abs(x)) / eb * jnp.float32(2.0**-22), 0.0, 0.25)
-    return eb * (jnp.float32(0.995) - kappa)
+    (the shared policy in :func:`repro.core.sz.internal_bound`)."""
+    from repro.core import sz
+
+    return sz.internal_bound(jnp.max(jnp.abs(x)), eb)
 
 
 def _lorenzo_kernel(eb_ref, x_ref, delta_ref):

@@ -36,14 +36,22 @@ def _resolve_sz_path(path: str) -> str:
     return path
 
 
-def sz_compress_kernel(x: jax.Array, eb: float, path: str = "auto"):
+def sz_compress_kernel(x: jax.Array, eb: float, path: str = "auto", eb_i=None):
     """Kernel-path SZ compress of a 3-D field: returns (PackedCodes,
     padded_shape, eb_i). Tile-blocked prediction (GPU-SZ blocking); the
-    bitstream is the tile-major layout shared by both paths."""
+    bitstream is the tile-major layout shared by both paths.
+
+    ``eb_i`` overrides the internally-derived guarded bound — the sharded
+    in-situ path (``repro.dist.insitu``) passes the bound computed from the
+    *global* |x|max (via pmax) so every shard quantizes on the same grid;
+    without the override each shard would derive a different bound from its
+    local max and the per-shard streams would disagree with the
+    single-device stream."""
     tz, ty, tw = _lor.TILE
     pads = [(0, (-s) % t) for s, t in zip(x.shape, (tz, ty, tw))]
     xp = jnp.pad(x, pads)
-    eb_i = _lor.guarded_eb(xp, eb)
+    if eb_i is None:
+        eb_i = _lor.guarded_eb(xp, eb)
     if _resolve_sz_path(path) == "fused":
         packed = _szf.fused_compress(xp, eb_i, interpret=_interpret())
     else:

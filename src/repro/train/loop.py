@@ -37,6 +37,11 @@ class LoopConfig:
     step_deadline_s: float = 600.0  # straggler threshold
     heartbeat_path: Optional[str] = None
     abort_on_nan: bool = True
+    # called as snapshot_hook(step, state) at every checkpoint boundary —
+    # the in-situ field-snapshot hook (launch.train wires it to
+    # dist.insitu.sharded_compress so large sharded leaves are compressed
+    # on their devices and persisted without a host gather)
+    snapshot_hook: Optional[Callable[[int, Any], None]] = None
 
 
 @dataclasses.dataclass
@@ -95,10 +100,18 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
             if hb is not None:
                 hb.write_text(json.dumps({"step": step, "t": time.time(), "loss": loss}))
             step += 1
+            snapped = False
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
                 ckpt.save(step, state, extra={"data_step": step})
+                if cfg.snapshot_hook is not None:
+                    cfg.snapshot_hook(step, state)
+                    snapped = True
             if preempted["flag"]:
                 ckpt.save(step, state, extra={"data_step": step, "preempted": True})
+                if cfg.snapshot_hook is not None and not snapped:
+                    # the preemption save is a checkpoint boundary too — the
+                    # field snapshot must not lag the state you restart from
+                    cfg.snapshot_hook(step, state)
                 break
     finally:
         ckpt.wait()
