@@ -112,6 +112,32 @@ def _insitu_ratios() -> dict:
         return {"sz": 5.0, "zfp": 4.0}
 
 
+# Modeled per-dispatch costs on the target accelerator: a kernel launch is
+# ~10 us of host-side enqueue; a *blocking* host sync (readback of a
+# variable-length stream size, then its D2H) flushes the pipeline at
+# ~150 us.  These multiply the O(#leaves)-vs-O(#buckets) counts the arena
+# path changes; the counts themselves are exact (derived from the arch's
+# parameter specs via ``core.arena.plan_buckets``).
+T_LAUNCH_S = 10e-6
+T_SYNC_S = 150e-6
+
+
+def _snapshot_dispatch_counts(cfg) -> tuple[int, int]:
+    """(n_leaves, n_buckets) for an arch's training state: params + the two
+    AdamW moments, bucketed exactly like the arena snapshot hook."""
+    import jax.tree_util as jtu
+
+    from repro.core import arena
+
+    model = registry.build_model(cfg)
+    specs = jtu.tree_leaves(model.specs(), is_leaf=lambda x: hasattr(x, "shape"))
+    entries = []
+    for rep in ("p", "m", "v"):  # weights + AdamW first/second moments
+        entries += [(f"{rep}{i}", tuple(p.shape), "float32")
+                    for i, p in enumerate(specs)]
+    return len(entries), len(arena.plan_buckets(entries))
+
+
 def insitu_snapshot_terms(mesh: str = "single") -> list[dict]:
     """Snapshot-cost roofline terms per (arch x shape): gathered vs in-situ.
 
@@ -123,6 +149,14 @@ def insitu_snapshot_terms(mesh: str = "single") -> list[dict]:
     read + one compressed write) is what remains.  Both are seconds per
     snapshot per device; the savings factor is link-bound whenever
     HBM_bw >> link_bw, i.e. essentially the compression ratio.
+
+    The **dispatch** terms fold in the arena-batched snapshot path: the
+    per-leaf hook issues one launch + two blocking host syncs per state
+    leaf, the arena hook one per size *bucket* (counts derived exactly from
+    the arch's parameter specs via ``core.arena.plan_buckets``, costs
+    modeled at ``T_LAUNCH_S``/``T_SYNC_S``).  For hundreds-of-leaves archs
+    the per-leaf dispatch term dwarfs the wire term — that overhead, not
+    the coder, is what the arena removes.
     """
     ratios = _insitu_ratios()
     link = DCN_BW if mesh == "multi" else ICI_BW
@@ -133,6 +167,9 @@ def insitu_snapshot_terms(mesh: str = "single") -> list[dict]:
             continue
         cfg = registry.get_config(cell["arch"])
         total, _ = param_count(cfg)
+        n_leaves, n_buckets = _snapshot_dispatch_counts(cfg)
+        t_disp_leaf = n_leaves * (T_LAUNCH_S + 2 * T_SYNC_S)
+        t_disp_arena = n_buckets * (T_LAUNCH_S + 2 * T_SYNC_S)
         per_dev = total * 4.0 / cell["n_devices"]  # f32 state bytes / device
         t_gather = per_dev / link
         for codec, cr in sorted(ratios.items()):
@@ -142,6 +179,12 @@ def insitu_snapshot_terms(mesh: str = "single") -> list[dict]:
                 "codec": codec, "state_bytes_per_dev": per_dev, "insitu_ratio": cr,
                 "snapshot_gathered_s": t_gather, "snapshot_insitu_s": t_insitu,
                 "snapshot_savings_x": t_gather / t_insitu,
+                "state_leaves": n_leaves, "arena_buckets": n_buckets,
+                "dispatch_per_leaf_s": t_disp_leaf,
+                "dispatch_arena_s": t_disp_arena,
+                "snapshot_per_leaf_total_s": t_insitu + t_disp_leaf,
+                "snapshot_arena_total_s": t_insitu + t_disp_arena,
+                "arena_speedup_x": (t_insitu + t_disp_leaf) / (t_insitu + t_disp_arena),
             })
     return rows
 
@@ -172,12 +215,16 @@ def main() -> None:
         snap = insitu_snapshot_terms(mesh)
         if snap:
             print(f"## in-situ snapshot terms ({mesh}-pod), seconds/snapshot per chip")
-            print("arch,shape,codec,state_MiB_dev,gathered_s,insitu_s,savings_x")
+            print("arch,shape,codec,state_MiB_dev,gathered_s,insitu_s,savings_x,"
+                  "leaves,buckets,per_leaf_total_s,arena_total_s,arena_speedup_x")
             for r in snap:
                 print(f"{r['arch']},{r['shape']},{r['codec']},"
                       f"{r['state_bytes_per_dev'] / 2**20:.1f},"
                       f"{r['snapshot_gathered_s']:.4f},{r['snapshot_insitu_s']:.4f},"
-                      f"{r['snapshot_savings_x']:.2f}")
+                      f"{r['snapshot_savings_x']:.2f},"
+                      f"{r['state_leaves']},{r['arena_buckets']},"
+                      f"{r['snapshot_per_leaf_total_s']:.4f},"
+                      f"{r['snapshot_arena_total_s']:.4f},{r['arena_speedup_x']:.2f}")
 
 
 if __name__ == "__main__":

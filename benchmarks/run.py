@@ -46,6 +46,8 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
         "packer": throughput.packer_microbench(n=1 << 18 if smoke else 1 << 22),
         "dist": throughput.dist_wire_bytes(n=1 << 18 if smoke else 1 << 22),
         "insitu": throughput.insitu_snapshot(n=n),
+        "snapshot_dispatch": throughput.snapshot_dispatch(
+            n_leaves=60 if smoke else 200, iters=2 if smoke else 5),
     }
     if not smoke:
         record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
@@ -77,6 +79,7 @@ def main() -> None:
         print(record["packer"])
         print("dist:", record["dist"])
         print("insitu:", record["insitu"])
+        print("snapshot_dispatch:", record["snapshot_dispatch"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         return
@@ -118,6 +121,7 @@ def main() -> None:
     print(record["packer"])
     print("dist:", record["dist"])
     print("insitu:", record["insitu"])
+    print("snapshot_dispatch:", record["snapshot_dispatch"])
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

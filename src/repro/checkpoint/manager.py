@@ -32,6 +32,13 @@ Design points for 1000+ node posture:
     ratio against the raw field bytes, and restores via
     ``insitu.host_restore`` — which needs no mesh, so the decoded field can
     re-``device_put`` onto a different topology (elastic resharding);
+  * arena leaves: a ``core.arena.HostArena`` in the state tree is a whole
+    *bucket* of leaves compressed in one launch (the arena-batched snapshot
+    path) — persisted as **one** ``arena_iNNNNN_sNNN.bin`` per shard with
+    the per-leaf descriptor index in the manifest (``arena-sz`` codec tag),
+    replacing O(#leaves) ``leaf_i_sNNN.bin`` files; restore rebuilds the
+    ``{name: array}`` dict mesh-free via ``arena.host_restore``.  The
+    legacy per-leaf in-situ format remains fully restorable (DESIGN.md §8);
   * keep_last: bounded disk usage; partial writes never corrupt older steps.
 """
 
@@ -157,9 +164,7 @@ def _decode_leaf(payload: bytes, meta: dict) -> np.ndarray:
     shape = tuple(meta["shape"])
     if meta["codec"] == "raw":
         return np.frombuffer(payload, dtype=dtype).reshape(shape).copy()
-    import jax.numpy as jnp
-
-    from repro.core import bitpack, sz, transforms
+    from repro.core import sz, transforms
 
     hlen = int.from_bytes(payload[:8], "little")
     header = json.loads(payload[8 : 8 + hlen])
@@ -170,13 +175,8 @@ def _decode_leaf(payload: bytes, meta: dict) -> np.ndarray:
         off += p["words_len"]
         widths = np.frombuffer(payload[off : off + p["widths_len"]], np.uint8)
         off += p["widths_len"]
-        n = p["n"]
-        cap = n + 2
-        wfull = np.zeros(cap, np.uint32)
-        wfull[: len(words)] = words
-        packed = bitpack.PackedCodes(jnp.asarray(wfull), jnp.asarray(widths),
-                                     jnp.int32(0), n)
-        c = sz.SZCompressed(packed, jnp.float32(p["eb"]), tuple(p["shape3d"]), None)
+        # descriptor-based stream view: the shared rebuild-from-slice path
+        c = sz.from_stream(words, widths, p["n"], p["eb"], p["shape3d"])
         parts.append(np.asarray(sz.decompress(c)))
     flats = []
     total = header["orig_len"]
@@ -214,6 +214,9 @@ def _to_host(x: Any) -> Any:
         return x  # already host-side compressed bytes; a stream leaf can
     # only appear in a state tree if its module is loaded, so the guard
     # keeps plain checkpointing decoupled from the dist import chain
+    ar = sys.modules.get("repro.core.arena")
+    if ar is not None and isinstance(x, ar.HostArena):
+        return x  # a whole bucket of leaves, already compressed on-device
     shards = getattr(x, "addressable_shards", None)
     if shards is None or len(shards) <= 1:
         return np.asarray(x)
@@ -267,9 +270,33 @@ class CheckpointManager:
         import sys
 
         insitu = sys.modules.get("repro.dist.insitu")
+        arena = sys.modules.get("repro.core.arena")
 
         raw = stored = 0
         for i, arr in enumerate(host):
+            if arena is not None and isinstance(arr, arena.HostArena):
+                # arena-batched snapshot bucket: one binary per shard (the
+                # compacted word arena + sidecars), per-leaf descriptors in
+                # the manifest — O(1) files where the per-leaf path wrote
+                # O(#leaves); the codec tag routes restore through
+                # arena.host_restore (mesh-independent)
+                meta = arena.host_meta(arr)
+                meta["shards"] = []
+                for j, blobs in enumerate(arr.shards):
+                    payload = arena.payload_encode(blobs)
+                    bmeta: dict[str, Any] = {}
+                    if _zstd is not None and self.policy.zstd_level > 0:
+                        payload = _zstd.ZstdCompressor(
+                            level=self.policy.zstd_level).compress(payload)
+                        bmeta["zstd"] = True
+                    (tmp / f"arena_{i:05d}_s{j:03d}.bin").write_bytes(payload)
+                    bmeta["crc32"] = _crc(payload)
+                    bmeta["stored_bytes"] = len(payload)
+                    meta["shards"].append(bmeta)
+                    stored += len(payload)
+                raw += arr.nbytes_raw
+                manifest["leaves"].append(meta)
+                continue
             if insitu is not None and isinstance(arr, insitu.HostShardedStream):
                 # in-situ compressed on-device: persist each shard's stream
                 # with the per-addressable-shard writer; the codec tag routes
@@ -350,6 +377,24 @@ class CheckpointManager:
             raise IOError(f"manifest digest mismatch in {d}")
         host = []
         for i, meta in enumerate(manifest["leaves"]):
+            if meta.get("codec", "").startswith("arena-"):
+                from repro.core import arena
+
+                payloads = []
+                for j, bmeta in enumerate(meta["shards"]):
+                    payload = (d / f"arena_{i:05d}_s{j:03d}.bin").read_bytes()
+                    if _crc(payload) != bmeta["crc32"]:
+                        raise IOError(f"arena leaf {i} shard {j} crc mismatch in {d}")
+                    if bmeta.get("zstd"):
+                        if _zstd is None:
+                            raise IOError(
+                                f"arena leaf {i} shard {j} is zstd-compressed "
+                                "but zstandard is not installed on this host")
+                        payload = _zstd.ZstdDecompressor().decompress(payload)
+                    payloads.append(payload)
+                # the whole bucket decodes to a {name: array} dict leaf
+                host.append(arena.host_restore(meta, payloads))
+                continue
             if meta.get("codec", "").startswith("insitu-"):
                 from repro.dist import insitu
 

@@ -103,6 +103,40 @@ def _block_layout(n: int, block: int) -> tuple[int, int]:
     return n_blocks, padded
 
 
+def exclusive_cumsum(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Exclusive prefix sum along ``axis`` (the stream-offset primitive every
+    compaction in this codebase derives from)."""
+    return jnp.cumsum(x, axis=axis) - x
+
+
+def compact_streams(rows: jax.Array, counts: jax.Array, capacity: int):
+    """Concatenate variable-length streams into one dense word arena.
+
+    ``rows`` is ``uint32[R, W]`` — R streams, each dense from word 0 and
+    ``counts[r] <= W`` words long.  Returns ``(words, offsets, used)``:
+    ``words`` is ``uint32[capacity]`` with stream ``r`` occupying
+    ``words[offsets[r] : offsets[r] + counts[r]]`` back-to-back in row order
+    (zeros beyond ``used = counts.sum()``), via **one** exclusive scan over
+    the counts and one gather — no bit arithmetic, no per-stream host sync.
+
+    This is the single compaction shared by the fused-kernel stream
+    assembler (``kernels.sz_fused``, rows = per-block payloads) and the
+    snapshot arena (``core.arena`` / ``dist.insitu``, rows = per-leaf
+    worst-case buffers): both were previously hand-rolled copies of the
+    same cumsum + masked-gather recipe.
+    """
+    counts = counts.astype(jnp.int32)
+    offsets = exclusive_cumsum(counts)
+    used = jnp.sum(counts)
+    i = jnp.arange(capacity, dtype=jnp.int32)
+    r = jnp.searchsorted(offsets, i, side="right").astype(jnp.int32) - 1
+    off = i - offsets[r]
+    valid = (off < counts[r]) & (i < used)
+    vals = rows[r, jnp.clip(off, 0, rows.shape[1] - 1)]
+    words = jnp.where(valid, vals, jnp.uint32(0))
+    return words, offsets, used
+
+
 @partial(jax.jit, static_argnames=("block",))
 def pack_codes(codes: jax.Array, block: int = BLOCK) -> PackedCodes:
     """Pack signed int32 ``codes`` (flat) into a block-adaptive bitstream."""
@@ -116,7 +150,7 @@ def pack_codes(codes: jax.Array, block: int = BLOCK) -> PackedCodes:
 
     width = jnp.max(bitlength(ub), axis=1)  # int32[n_blocks]
     block_bits = width * block
-    base = jnp.cumsum(block_bits) - block_bits  # exclusive prefix, int32
+    base = exclusive_cumsum(block_bits)  # int32
 
     # Absolute bit position of bit 0 of every code.
     idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
@@ -154,7 +188,7 @@ def unpack_codes(packed: PackedCodes, block: int = BLOCK) -> jax.Array:
     n_blocks, padded = _block_layout(n, block)
     width = packed.widths.astype(jnp.int32)
     block_bits = width * block
-    base = jnp.cumsum(block_bits) - block_bits
+    base = exclusive_cumsum(block_bits)
 
     idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
     blk = jnp.arange(padded, dtype=jnp.int32) // block
@@ -175,6 +209,91 @@ def unpack_codes(packed: PackedCodes, block: int = BLOCK) -> jax.Array:
     return unzigzag(u[:n])
 
 
+def pack_codes_rows(codes: jax.Array, n: jax.Array, block: int = BLOCK):
+    """Batched :func:`pack_codes` over ``codes: int32[B, P]`` rows (P a
+    ``block`` multiple) — one dispatch packs a whole megabatch of streams.
+
+    Row ``b`` holds a stream of ``n[b]`` real codes left-justified in the
+    row; the caller must have zeroed entries at index >= ``n[b]`` (zero
+    codes contribute nothing to any block payload, so the packed stream is
+    **byte-identical** to ``pack_codes(codes[b, :n[b]])`` — trailing
+    all-zero blocks have width 0 and add no payload words).
+
+    Returns ``(rows, counts, widths, total_bits)``:
+      * ``rows``       uint32[B, P + 2] worst-case buffers, payload dense
+                       from word 0 (the :func:`compact_streams` contract),
+      * ``counts``     int32[B] true payload words per row,
+      * ``widths``     uint8[B, P // block] block widths (``widths[b,
+                       :ceil(n[b]/block)]`` equals the per-stream header),
+      * ``total_bits`` int32[B] per-stream ``PackedCodes.total_bits``
+                       (headers charged for ``ceil(n[b]/block)`` blocks
+                       only, matching the per-leaf accounting).
+    """
+    bsz, padded = codes.shape
+    if padded % block:
+        raise ValueError(f"pack_codes_rows: row length {padded} not a {block} multiple")
+    if padded * 32 >= 2**31:
+        raise ValueError(f"pack_codes_rows: P={padded} too large for int32 bit offsets")
+    n = n.astype(jnp.int32)
+    n_blocks = padded // block
+    u = zigzag(codes)
+    ub = u.reshape(bsz, n_blocks, block)
+
+    width = jnp.max(bitlength(ub), axis=2)  # int32[B, n_blocks]
+    block_bits = width * block
+    base = exclusive_cumsum(block_bits, axis=1)
+
+    idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
+    # per-code block values via repeat, not a [B, P] gather — XLA CPU lowers
+    # the broadcast-in-dim ~2.5x faster and TPU avoids the gather unit
+    w_per = jnp.repeat(width, block, axis=1)  # [B, P]
+    pos0 = jnp.repeat(base, block, axis=1) + idx_in_block[None, :] * w_per
+
+    capacity = padded + 2  # per-row worst case, as in pack_codes
+    buf = jnp.zeros((bsz, capacity), jnp.uint32)
+    off = (pos0 & 31).astype(jnp.uint32)
+    word0 = pos0 >> 5
+    lo = u << off
+    hi = (u >> 1) >> (jnp.uint32(31) - off)
+    rows_idx = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    buf = buf.at[rows_idx, word0].add(lo, mode="drop")
+    buf = buf.at[rows_idx, word0 + 1].add(hi, mode="drop")
+
+    # Stored words per row: nominally 2*sum(width) (= ceil(64w/32) per
+    # block), but capped at n + 2 exactly like ``to_storage`` slicing a
+    # ``pack_codes`` buffer — a partial tail block charges the stream
+    # layout 64*w bits, yet every bit past the last real code is zero and
+    # real codes are <= 32 bits each, so words beyond n + 2 are always
+    # zero and the per-leaf format never stores them.
+    counts = jnp.minimum(2 * jnp.sum(width, axis=1), n + 2)
+    nb_real = (n + block - 1) // block
+    total_bits = jnp.sum(block_bits, axis=1) + nb_real * jnp.int32(_WIDTH_BITS)
+    return buf, counts, width.astype(jnp.uint8), total_bits
+
+
+def unpack_codes_rows(rows: jax.Array, widths: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Inverse of :func:`pack_codes_rows`: per-row dense payload buffers +
+    block widths -> int32[B, P] codes (zeros beyond each row's real length,
+    same two-gather word-level recipe as :func:`unpack_codes`)."""
+    bsz, cap = rows.shape
+    width = widths.astype(jnp.int32)  # [B, n_blocks]
+    padded = width.shape[1] * block
+    block_bits = width * block
+    base = exclusive_cumsum(block_bits, axis=1)
+
+    idx_in_block = jnp.arange(padded, dtype=jnp.int32) % block
+    w_per = jnp.repeat(width, block, axis=1)  # repeat, not gather (as above)
+    pos0 = jnp.repeat(base, block, axis=1) + idx_in_block[None, :] * w_per
+
+    off = (pos0 & 31).astype(jnp.uint32)
+    word0 = jnp.clip(pos0 >> 5, 0, cap - 1)
+    word1 = jnp.clip((pos0 >> 5) + 1, 0, cap - 1)
+    lo = jnp.take_along_axis(rows, word0, axis=1) >> off
+    hi = (jnp.take_along_axis(rows, word1, axis=1) << 1) << (jnp.uint32(31) - off)
+    u = (lo | hi) & code_mask(w_per)
+    return unzigzag(u)
+
+
 def packed_nbytes(packed: PackedCodes) -> jax.Array:
     """True storage bytes of the stream (payload + block headers)."""
     return (packed.total_bits + 7) // 8
@@ -189,3 +308,21 @@ def to_storage(packed: PackedCodes) -> dict[str, np.ndarray]:
         "widths": np.asarray(packed.widths),
         "n": np.asarray(packed.n),
     }
+
+
+def from_storage(words, widths, n: int, total_bits=None) -> PackedCodes:
+    """Rebuild a :class:`PackedCodes` from its true-payload storage slice
+    (inverse of :func:`to_storage`): zero-extend the sliced words back to
+    the worst-case ``n + 2`` capacity the unpackers expect.  The shared
+    rebuild for the checkpoint reader, ``dist.insitu`` and ``core.arena``
+    host paths."""
+    words = np.asarray(words, np.uint32)
+    widths = np.asarray(widths, np.uint8)
+    if total_bits is None:
+        total_bits = int(np.sum(widths.astype(np.int64)) * BLOCK
+                         + widths.shape[0] * _WIDTH_BITS)
+    cap = n + 2
+    wfull = np.zeros(cap, np.uint32)
+    wfull[: len(words)] = words
+    return PackedCodes(jnp.asarray(wfull), jnp.asarray(widths),
+                       jnp.int32(total_bits), n)

@@ -103,6 +103,17 @@ def lorenzo_reconstruct(delta: jax.Array, exchange=None, ndim: int | None = None
     return q
 
 
+def from_stream(words, widths, n: int, eb_i, shape, total_bits=None,
+                block_size: int | None = None) -> SZCompressed:
+    """Descriptor-based stream view: rebuild an :class:`SZCompressed` from a
+    true-payload word slice (an arena slice, a ``leaf_i_sNNN.bin`` payload,
+    …) plus its sidecar descriptors.  The inverse of slicing
+    ``bitpack.to_storage`` out of :func:`compress`'s result — shared by the
+    checkpoint reader, ``core.arena`` and ``dist.insitu``."""
+    packed = bitpack.from_storage(words, widths, n, total_bits)
+    return SZCompressed(packed, jnp.float32(eb_i), tuple(shape), block_size)
+
+
 def _to_blocks(x: jax.Array, b: int) -> tuple[jax.Array, tuple[int, ...]]:
     """Pad to multiples of ``b`` and carve independent b^d blocks."""
     pads = [(0, (-s) % b) for s in x.shape]

@@ -214,7 +214,13 @@ def _uncarve_blocks(xb: jax.Array, shape) -> jax.Array:
 
 def block_transform(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stages 1-4: float blocks -> (negabinary sequency coeffs, emax, gtops)."""
-    blocks = _carve_blocks(x.astype(jnp.float32))
+    return blocks_transform(_carve_blocks(x.astype(jnp.float32)))
+
+
+def blocks_transform(blocks: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stages 2-4 on already-carved (n, 4, 4, 4) blocks — the entry point
+    the arena path batches over (the concatenated blocks of many leaves are
+    just more rows; per-block outputs are independent)."""
     maxabs = jnp.max(jnp.abs(blocks), axis=(1, 2, 3))
     _, e = jnp.frexp(maxabs)  # maxabs < 2^e
     e = jnp.clip(e, -100, 127).astype(jnp.int32)
@@ -482,6 +488,26 @@ def decode_words(words: jax.Array, gtops: jax.Array, rate: int) -> jax.Array:
     g1 = flat[jnp.clip(row0 + w0 + 1, 0, lim)]
     g2 = flat[jnp.clip(row0 + w0 + 2, 0, lim)]
     return _extract_coeffs(g0, g1, g2, OFF, keep, gtops)
+
+
+def n_blocks_for(shape) -> int:
+    """Number of 4^3 blocks :func:`_carve_blocks` produces for ``shape`` —
+    the analytic per-leaf block count the fixed-rate arena layout keys on."""
+    nb = 1
+    for s in shape:
+        nb *= -(-s // BLOCK_SIDE)
+    return nb
+
+
+def from_words(words, emax, gtops, shape, rate: int) -> ZFPCompressed:
+    """Descriptor-based stream view: rebuild a :class:`ZFPCompressed` from a
+    flat contiguous word slice (an arena slice) plus its header sidecars —
+    fixed rate means the slice bounds are analytic (``n_blocks_for(shape) *
+    payload_words(rate)`` words), no scan or sidecar offsets needed."""
+    wpb = payload_words(rate)
+    words = jnp.asarray(words, jnp.uint32).reshape(-1, wpb)
+    return ZFPCompressed(words, jnp.asarray(emax, jnp.uint8),
+                         jnp.asarray(gtops, jnp.uint8), tuple(shape), rate)
 
 
 def payload_words(rate: int) -> int:

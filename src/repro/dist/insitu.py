@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as PS
 
+from repro.core import arena as arena_core
 from repro.core import bitpack
 from repro.core import sz as sz_core
 from repro.core import zfp as zfp_core
@@ -403,6 +404,223 @@ def sharded_decompress(stream, mesh) -> jax.Array:
                       out_spec)(stream.words, stream.emax, stream.gtops)
 
 
+# ----------------------------------------------------------- stream arena --
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("arena", "widths", "offsets", "counts", "total_bits",
+                      "eb_i", "used"),
+         meta_fields=("names", "shapes", "dtypes", "ns", "padded_loc",
+                      "axis", "grid", "halo"))
+@dataclasses.dataclass
+class ShardedSZArena:
+    """Per-shard stream arenas for one snapshot bucket, stacked on a leading
+    shard axis (a pytree; every descriptor is static).
+
+    Each shard compacted its rows' variable-length streams into one local
+    uint32 arena with one exclusive scan; shard ``s``'s stream for row
+    ``b`` is ``arena[s, offsets[s, b] : offsets[s, b] + counts[s, b]]`` —
+    byte-identical to the per-leaf ``sharded_compress`` stream of the same
+    flat leaf (and, with ``halo``, to the single-device ``sz.compress``
+    stream of the whole flat leaf, per shard segment)."""
+
+    arena: jax.Array  # uint32[g, cap_loc]
+    widths: jax.Array  # uint8[g, B, P_loc // 64]
+    offsets: jax.Array  # int32[g, B]
+    counts: jax.Array  # int32[g, B]
+    total_bits: jax.Array  # int32[g, B]
+    eb_i: jax.Array  # float32[B] global pmax-derived bounds
+    used: jax.Array  # int32[g] live words per shard arena
+    names: tuple
+    shapes: tuple  # original leaf shapes
+    dtypes: tuple
+    ns: tuple  # global flat element counts
+    padded_loc: int  # P_loc, per-shard row length
+    axis: Optional[str]  # mesh axis the flat rows are split over (or None)
+    grid: int  # shards
+    halo: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaBucket:
+    """A size bucket of arena-eligible leaves sharing one flat partition
+    (``axis``/``grid``) and one per-shard row length ``padded_loc``."""
+
+    names: tuple
+    shapes: tuple
+    dtypes: tuple
+    ns: tuple
+    padded_loc: int
+    axis: Optional[str]
+    grid: int
+
+    @property
+    def rows(self) -> int:
+        return len(self.names)
+
+    @property
+    def nbytes_raw(self) -> int:
+        return sum(int(np.prod(s)) * np.dtype(d).itemsize
+                   for s, d in zip(self.shapes, self.dtypes))
+
+
+def _flat_axis(shape, spec, mesh) -> Optional[str]:
+    """Mesh axis a leaf's row-major flattening is contiguously split over,
+    or ``None`` for replicated leaves.  Only leading-dim single-axis
+    partitions qualify: flattening an axis-0 split keeps every shard a
+    contiguous flat segment, so the 1-D halo is exact; any other partition
+    interleaves flat segments and the leaf is not arena-eligible (the
+    caller falls back to the per-leaf path)."""
+    layout = partition_layout(shape, spec, mesh)
+    if any(a is not None for a in layout[1:]):
+        raise NotImplementedError(
+            f"arena path needs leading-dim (or replicated) partitions; "
+            f"layout {layout} interleaves the flat order")
+    return layout[0] if layout else None
+
+
+def plan_arena(entries: Sequence[tuple], mesh,
+               elem_budget: int = arena_core.ROW_ELEM_BUDGET):
+    """Bucket arena-eligible leaves: ``entries`` are ``(name, shape, dtype,
+    spec)``; returns ``(buckets, skipped)`` where ``skipped`` is a list of
+    ``(name, reason)`` for leaves the arena cannot batch (non-leading-dim
+    partitions, non-divisible dims, oversized rows) — those stay on the
+    per-leaf path."""
+    sizes = dict(mesh.shape)
+    groups: dict[tuple, list] = {}
+    skipped = []
+    for name, shape, dtype, spec in entries:
+        n = int(np.prod(shape)) if len(shape) else 1
+        try:
+            axis = _flat_axis(shape, spec, mesh)
+        except (NotImplementedError, ValueError) as e:
+            skipped.append((str(name), str(e)))
+            continue
+        g = sizes.get(axis, 1) if axis else 1
+        if g <= 1:
+            axis, g = None, 1
+        n_loc = n // g
+        p_loc = arena_core.row_length(n_loc)
+        if p_loc * 32 >= 2**31:
+            skipped.append((str(name), f"row n={n_loc} too large for int32 bit offsets"))
+            continue
+        groups.setdefault((axis, g, p_loc), []).append(
+            (str(name), tuple(shape), str(np.dtype(dtype)), n))
+    buckets = []
+    for (axis, g, p_loc) in sorted(groups, key=lambda k: (k[0] or "", k[1], k[2])):
+        for sub in arena_core.split_budget(groups[(axis, g, p_loc)], p_loc,
+                                           elem_budget):
+            buckets.append(ArenaBucket(
+                tuple(e[0] for e in sub), tuple(e[1] for e in sub),
+                tuple(e[2] for e in sub), tuple(e[3] for e in sub),
+                p_loc, axis, g))
+    return buckets, skipped
+
+
+def sharded_compress_arena(leaves: Sequence[jax.Array], bucket: ArenaBucket,
+                           mesh, eb, halo: bool = True) -> ShardedSZArena:
+    """Compress a bucket of flat-contiguously-sharded leaves into per-shard
+    stream arenas — **one** launch, **one** halo ppermute, **one** pmax for
+    the whole bucket (the per-leaf path issued each per leaf).
+
+    Jit-friendly: wrap in ``jax.jit`` keyed on the bucket signature (the
+    snapshot hook compiles one function per bucket, not per leaf)."""
+    axis, g = bucket.axis, bucket.grid
+    p_loc = bucket.padded_loc
+    ns_loc = tuple(n // g for n in bucket.ns)
+    cap_loc = arena_core.sz_capacity(ns_loc)
+    rows = []
+    for leaf, n_loc in zip(leaves, ns_loc):
+        seg = jnp.asarray(leaf).astype(jnp.float32).reshape(g, n_loc)
+        rows.append(jnp.pad(seg, ((0, 0), (0, p_loc - n_loc))))
+    stacked = jnp.stack(rows)  # [B, g, P_loc]; shard boundaries pre-padded
+
+    def body(xs):
+        xs = xs[:, 0]  # [B, P_loc] local rows
+        n_arr = jnp.asarray(ns_loc, jnp.int32)
+        mask = arena_core._row_mask(p_loc, n_arr)
+        am = jnp.max(jnp.where(mask, jnp.abs(xs), 0.0), axis=1)
+        ex = None
+        if axis is not None:
+            am = _LaxOps.pmax(am, (axis,))
+            if halo:
+                # the per-leaf halo hook, specialized to the flat axis: the
+                # [B, 1] last-quantum plane ships one shard right in ONE
+                # permute for the whole bucket
+                hx = halo_exchange((axis,), {axis: g})
+                ex = lambda last: hx(0, last)
+        ar, widths, offsets, counts, tb, eb_i, used = arena_core.sz_encode_rows(
+            xs, n_arr, eb, cap_loc, absmax=am, exchange=ex)
+        return (ar[None], widths[None], offsets[None], counts[None],
+                tb[None], eb_i, used[None])
+
+    stack = PS(axis) if axis else PS()
+    ar, widths, offsets, counts, tb, eb_i, used = _shard_map(
+        body, mesh, (PS(None, axis, None) if axis else PS(),),
+        (stack, stack, stack, stack, stack, PS(), stack))(stacked)
+    return ShardedSZArena(ar, widths, offsets, counts, tb, eb_i, used,
+                          bucket.names, bucket.shapes, bucket.dtypes,
+                          bucket.ns, p_loc, axis, g,
+                          bool(halo) if axis else True)
+
+
+def sharded_decompress_arena(stream: ShardedSZArena, mesh) -> list[jax.Array]:
+    """Inverse of :func:`sharded_compress_arena` on a mesh: per-shard
+    batched unpack + local cumsum, one log-step carry scan per bucket, then
+    scatter the rows back into leaves (original shapes/dtypes).  Bitwise
+    equal to the single-device flat round-trip for halo arenas."""
+    axis, g = stream.axis, stream.grid
+    ns_loc = tuple(n // g for n in stream.ns)
+
+    def body(ar, widths, offsets, counts, eb_i):
+        n_arr = jnp.asarray(ns_loc, jnp.int32)
+        carry = None
+        if axis is not None and stream.halo:
+            # the per-leaf carry hook (log-step scan), one for the bucket
+            cx = carry_exchange((axis,), {axis: g})
+            carry = lambda totals: cx(0, totals)
+        rows = arena_core.sz_decode_rows(ar[0], widths[0], offsets[0],
+                                         counts[0], eb_i, carry=carry, n=n_arr)
+        return rows[None]  # [1, B, P_loc]
+
+    stack = PS(axis) if axis else PS()
+    rows = _shard_map(
+        body, mesh, (stack, stack, stack, stack, PS()),
+        PS(axis, None, None) if axis else PS())(
+        stream.arena, stream.widths, stream.offsets, stream.counts, stream.eb_i)
+    out = []
+    for b, (shape, dtype, n_loc) in enumerate(
+            zip(stream.shapes, stream.dtypes, ns_loc)):
+        flat = rows[:, b, :n_loc].reshape(-1)  # shard segments are contiguous
+        out.append(flat.reshape(shape).astype(dtype))
+    return out
+
+
+def arena_to_host(stream: ShardedSZArena) -> arena_core.HostArena:
+    """Pull a sharded bucket arena to host: one readback of the per-shard
+    ``used`` vector, then one D2H copy of the live arena slab (sliced to
+    ``max(used)`` columns) — O(1) host syncs per bucket vs O(#leaves x
+    #shards) on the per-leaf path."""
+    used = np.asarray(stream.used, np.int64)  # the single readback
+    max_used = int(used.max()) if used.size else 0
+    slab = np.asarray(stream.arena[:, :max_used])  # the single D2H copy
+    widths = np.asarray(stream.widths)
+    offsets = np.asarray(stream.offsets, np.int32)
+    counts = np.asarray(stream.counts, np.int32)
+    tb = np.asarray(stream.total_bits, np.int32)
+    shards = [{
+        "arena": slab[s, : int(used[s])].copy(),
+        "widths": widths[s],
+        "offsets": offsets[s],
+        "counts": counts[s],
+        "total_bits": tb[s],
+    } for s in range(stream.grid)]
+    return arena_core.HostArena(
+        arena_core.CODEC_SZ, stream.names, stream.shapes, stream.dtypes,
+        stream.ns, stream.padded_loc * stream.grid, stream.grid, stream.halo,
+        [float(v) for v in np.asarray(stream.eb_i)], shards)
+
+
 # ------------------------------------------------------------ host side ----
 
 
@@ -504,37 +722,10 @@ def host_decode(hss: HostShardedStream) -> np.ndarray:
     return np.asarray(q.astype(jnp.float32) * (2.0 * eb_i))
 
 
-def shard_payload_encode(blobs: dict) -> bytes:
-    """One shard's compressed arrays -> a self-describing byte payload
-    (json header + concatenated array bytes) for ``checkpoint.manager``'s
-    ``leaf_i_sNNN.bin`` writer."""
-    import json
-
-    header, parts = {}, []
-    for name in sorted(blobs):
-        a = np.asarray(blobs[name])
-        b = a.tobytes()
-        header[name] = {"dtype": str(a.dtype), "shape": list(a.shape), "len": len(b)}
-        parts.append(b)
-    hdr = json.dumps(header).encode()
-    return len(hdr).to_bytes(4, "little") + hdr + b"".join(parts)
-
-
-def shard_payload_decode(payload: bytes) -> dict:
-    """Inverse of :func:`shard_payload_encode`."""
-    import json
-
-    hlen = int.from_bytes(payload[:4], "little")
-    header = json.loads(payload[4 : 4 + hlen])
-    off = 4 + hlen
-    out = {}
-    for name in sorted(header):
-        m = header[name]
-        a = np.frombuffer(payload[off : off + m["len"]],
-                          np.dtype(m["dtype"])).reshape(m["shape"])
-        out[name] = a.copy() if a.ndim else a.reshape(())[()]
-        off += m["len"]
-    return out
+# One wire format for every compressed shard payload (per-leaf streams here,
+# bucket arenas in ``core.arena``): json header + concatenated array bytes.
+shard_payload_encode = arena_core.payload_encode
+shard_payload_decode = arena_core.payload_decode
 
 
 def host_stream_meta(hss: HostShardedStream) -> dict:
@@ -571,10 +762,5 @@ def host_restore(meta: dict, payloads: list) -> np.ndarray:
 
 
 def _rebuild_packed(blobs: dict, n: int) -> bitpack.PackedCodes:
-    cap = n + 2
-    wfull = np.zeros(cap, np.uint32)
-    w = np.asarray(blobs["words"], np.uint32)
-    wfull[: len(w)] = w
-    return bitpack.PackedCodes(jnp.asarray(wfull),
-                               jnp.asarray(blobs["widths"], np.uint8),
-                               jnp.int32(blobs["total_bits"]), n)
+    return bitpack.from_storage(blobs["words"], blobs["widths"], n,
+                                int(blobs["total_bits"]))

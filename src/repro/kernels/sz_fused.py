@@ -55,6 +55,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -143,9 +144,10 @@ def _unpack_blocks(words: jax.Array, width: jax.Array) -> jax.Array:
     return u & bitpack.code_mask(width[:, None])
 
 
-def _fused_encode_kernel(eb_ref, x_ref, words_ref, widths_ref):
-    x = x_ref[...]
-    inv2eb = 1.0 / (2.0 * eb_ref[0, 0])
+def _encode_tile(eb, x, words_ref, widths_ref):
+    """Shared tile body: quantize + 3-D Lorenzo + zigzag + width + pack one
+    (8, 64, 128) f32 tile into its block payload/width output refs."""
+    inv2eb = 1.0 / (2.0 * eb)
     q = jnp.round(x * inv2eb).astype(jnp.int32)
     d = q
     for axis in range(3):
@@ -158,6 +160,17 @@ def _fused_encode_kernel(eb_ref, x_ref, words_ref, widths_ref):
     words = _pack_blocks(u, width)
     words_ref[...] = words.reshape(words_ref.shape)
     widths_ref[...] = width.reshape(widths_ref.shape)
+
+
+def _fused_encode_kernel(eb_ref, x_ref, words_ref, widths_ref):
+    _encode_tile(eb_ref[0, 0], x_ref[...], words_ref, widths_ref)
+
+
+def _fused_encode_kernel_batched(eb_ref, x_ref, words_ref, widths_ref):
+    # batched grid: leading dim-1 block axis carries the batch row; the
+    # per-row error bound arrives via the SMEM block indexed by the same
+    # grid axis, so one compiled kernel serves every row of the megabatch
+    _encode_tile(eb_ref[0, 0], x_ref[0], words_ref, widths_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -197,19 +210,11 @@ def _assemble_stream(block_words: jax.Array, width: jax.Array, n: int) -> bitpac
 
     Produces a ``PackedCodes`` byte-identical to ``bitpack.pack_codes`` on
     the tile-major flat residuals: block payloads are word-aligned, so the
-    dense stream is one gather indexed by the exclusive scan of per-block
-    word counts — no bit arithmetic.
+    dense stream is one :func:`bitpack.compact_streams` call (exclusive
+    scan of per-block word counts + one gather — no bit arithmetic).
     """
-    wcount = 2 * width  # words per block (64 codes * w bits / 32)
-    base = jnp.cumsum(wcount) - wcount
-    used = jnp.sum(wcount)
-    capacity = n + 2  # match pack_codes' worst-case buffer exactly
-    i = jnp.arange(capacity, dtype=jnp.int32)
-    b = jnp.searchsorted(base, i, side="right").astype(jnp.int32) - 1
-    off = i - base[b]
-    valid = (off < wcount[b]) & (i < used)
-    vals = block_words[b, jnp.clip(off, 0, WORDS_PER_BLOCK - 1)]
-    words = jnp.where(valid, vals, jnp.uint32(0))
+    # capacity n + 2 matches pack_codes' worst-case buffer exactly
+    words, _, _ = bitpack.compact_streams(block_words, 2 * width, n + 2)
     total_bits = jnp.sum(width * bitpack.BLOCK) + jnp.int32(width.shape[0] * bitpack._WIDTH_BITS)
     return bitpack.PackedCodes(words, width.astype(jnp.uint8), total_bits, n)
 
@@ -226,18 +231,91 @@ def fused_compress(x: jax.Array, eb_i: jax.Array, interpret: bool = True) -> bit
     return _assemble_stream(block_words, width, n)
 
 
+# ----------------------------------------------------- batched / arena -----
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_encode_batched(x: jax.Array, eb_i: jax.Array, interpret: bool = True):
+    """Batched fused encode: (B, Z, Y, X) TILE-padded rows + per-row bounds
+    -> per-block payload words/widths for **all** rows in one launch (grid
+    gains a leading batch axis; rows never sync with the host)."""
+    bsz = x.shape[0]
+    gz, gy, gx = _grid(x.shape[1:])
+    n_tiles = gz * gy * gx
+    eb_arr = jnp.asarray(eb_i, jnp.float32).reshape(bsz, 1)
+    tidx = lambda b, i, j, k, gz=gz, gy=gy, gx=gx: ((b * gz + i) * gy + j) * gx + k
+    words, widths = pl.pallas_call(
+        _fused_encode_kernel_batched,
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz * n_tiles * 512, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((bsz * n_tiles * 8, 128), jnp.int32),
+        ),
+        grid=(bsz, gz, gy, gx),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j, k: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,) + TILE, lambda b, i, j, k: (b, i, j, k)),
+        ],
+        out_specs=(
+            pl.BlockSpec((512, 128), lambda b, i, j, k: (tidx(b, i, j, k), 0)),
+            pl.BlockSpec((8, 128), lambda b, i, j, k: (tidx(b, i, j, k), 0)),
+        ),
+        interpret=interpret,
+    )(eb_arr, x)
+    return (words.reshape(-1, WORDS_PER_BLOCK), widths.reshape(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_compress_batched(x: jax.Array, eb_i: jax.Array, interpret: bool = True):
+    """Arena-batched fused SZ encode: (B, Z, Y, X) rows -> one contiguous
+    uint32 word arena holding every row's stream back-to-back.
+
+    Returns ``(arena, widths, offsets, counts, total_bits, used)`` with
+    ``arena[offsets[b] : offsets[b] + counts[b]]`` **byte-identical** to
+    ``fused_compress(x[b], eb_i[b])``'s true payload (``to_storage``
+    words) — all rows' tiles run under one batched grid and compact with a
+    single device-side exclusive scan (:func:`bitpack.compact_streams`);
+    nothing about the layout needs a per-row host round-trip.
+    """
+    bsz = x.shape[0]
+    n = int(np.prod(x.shape[1:]))
+    if n * 32 >= 2**31:
+        raise ValueError(f"fused_compress_batched: row n={n} too large; chunk the field")
+    block_words, width = _fused_encode_batched(x, eb_i, interpret=interpret)
+    nb = n // bitpack.BLOCK  # blocks per row (rows are TILE-padded => full)
+    # Full blocks: 2*sum(width) <= n per row, so no n+2 truncation can occur
+    # and the arena capacity is exactly the sum of per-row worst cases.
+    arena, block_offsets, used = bitpack.compact_streams(
+        block_words, 2 * width, bsz * (n + 2))
+    width_rows = width.reshape(bsz, nb)
+    offsets = block_offsets.reshape(bsz, nb)[:, 0]
+    counts = 2 * jnp.sum(width_rows, axis=1)
+    total_bits = (jnp.sum(width_rows, axis=1) * jnp.int32(bitpack.BLOCK)
+                  + jnp.int32(nb * bitpack._WIDTH_BITS))
+    return arena, width_rows.astype(jnp.uint8), offsets, counts, total_bits, used
+
+
 # ------------------------------------------------------------- decode -----
 
 
-def _fused_decode_kernel(eb_ref, words_ref, widths_ref, out_ref):
-    words = words_ref[...].reshape(BLOCKS_PER_TILE, WORDS_PER_BLOCK)
-    width = widths_ref[...].reshape(BLOCKS_PER_TILE)
-    u = _unpack_blocks(words, width)
+def _decode_tile(eb, words, width):
+    """Shared tile body: unpack + unzigzag + 3-fold cumsum + dequantize one
+    tile's payload back to its (8, 64, 128) f32 block."""
+    u = _unpack_blocks(words.reshape(BLOCKS_PER_TILE, WORDS_PER_BLOCK),
+                       width.reshape(BLOCKS_PER_TILE))
     delta = bitpack.unzigzag(u).reshape(TILE)
     q = delta
     for axis in range(3):
         q = jnp.cumsum(q, axis=axis)
-    out_ref[...] = q.astype(jnp.float32) * (2.0 * eb_ref[0, 0])
+    return q.astype(jnp.float32) * (2.0 * eb)
+
+
+def _fused_decode_kernel(eb_ref, words_ref, widths_ref, out_ref):
+    out_ref[...] = _decode_tile(eb_ref[0, 0], words_ref[...], widths_ref[...])
+
+
+def _fused_decode_kernel_batched(eb_ref, words_ref, widths_ref, out_ref):
+    out_ref[...] = _decode_tile(eb_ref[0, 0], words_ref[...],
+                                widths_ref[...]).reshape(out_ref.shape)
 
 
 def _disassemble_stream(packed: bitpack.PackedCodes) -> tuple[jax.Array, jax.Array]:
@@ -245,7 +323,7 @@ def _disassemble_stream(packed: bitpack.PackedCodes) -> tuple[jax.Array, jax.Arr
     :func:`_assemble_stream`; one XLA gather)."""
     width = packed.widths.astype(jnp.int32)
     wcount = 2 * width
-    base = jnp.cumsum(wcount) - wcount
+    base = bitpack.exclusive_cumsum(wcount)
     j = jnp.arange(WORDS_PER_BLOCK, dtype=jnp.int32)
     idx = base[:, None] + j[None, :]
     cap = packed.words.shape[0]
@@ -275,5 +353,46 @@ def fused_decompress(packed: bitpack.PackedCodes, padded_shape: tuple[int, ...],
             pl.BlockSpec((8, 128), lambda i, j, k, gy=gy, gx=gx: (i * gy * gx + j * gx + k, 0)),
         ],
         out_specs=pl.BlockSpec(TILE, lambda i, j, k: (i, j, k)),
+        interpret=interpret,
+    )(eb_arr, words_c, widths_c)
+
+
+@functools.partial(jax.jit, static_argnames=("padded_shape", "interpret"))
+def fused_decompress_batched(arena: jax.Array, widths: jax.Array,
+                             padded_shape: tuple[int, ...], eb_i: jax.Array,
+                             interpret: bool = True) -> jax.Array:
+    """Inverse of :func:`fused_compress_batched`: the contiguous word arena
+    + per-row block widths -> (B, Z, Y, X) f32 rows in one batched launch.
+
+    Rows live back-to-back in the arena, so the global exclusive scan of
+    per-block word counts *is* the per-block offset table — the whole arena
+    disassembles with one gather, no per-row bookkeeping.
+    """
+    bsz = widths.shape[0]
+    gz, gy, gx = _grid(padded_shape)
+    n_tiles = gz * gy * gx
+    width = widths.reshape(-1).astype(jnp.int32)  # [B * blocks_per_row]
+    wcount = 2 * width
+    base = bitpack.exclusive_cumsum(wcount)
+    j = jnp.arange(WORDS_PER_BLOCK, dtype=jnp.int32)
+    idx = base[:, None] + j[None, :]
+    cap = arena.shape[0]
+    vals = arena[jnp.clip(idx, 0, cap - 1)]
+    block_words = jnp.where(j[None, :] < wcount[:, None], vals, jnp.uint32(0))
+
+    words_c = block_words.reshape(bsz * n_tiles * 512, 128)
+    widths_c = width.reshape(bsz * n_tiles * 8, 128)
+    eb_arr = jnp.asarray(eb_i, jnp.float32).reshape(bsz, 1)
+    tidx = lambda b, i, j, k, gz=gz, gy=gy, gx=gx: ((b * gz + i) * gy + j) * gx + k
+    return pl.pallas_call(
+        _fused_decode_kernel_batched,
+        out_shape=jax.ShapeDtypeStruct((bsz,) + tuple(padded_shape), jnp.float32),
+        grid=(bsz, gz, gy, gx),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j, k: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((512, 128), lambda b, i, j, k: (tidx(b, i, j, k), 0)),
+            pl.BlockSpec((8, 128), lambda b, i, j, k: (tidx(b, i, j, k), 0)),
+        ],
+        out_specs=pl.BlockSpec((1,) + TILE, lambda b, i, j, k: (b, i, j, k)),
         interpret=interpret,
     )(eb_arr, words_c, widths_c)

@@ -110,6 +110,32 @@ def fused_compress_blocks(blocks: jax.Array, rate: int,
     return words, emax, gtops
 
 
+def fused_compress_arena(blocks: jax.Array, rate: int,
+                         interpret: bool | None = None):
+    """Arena-batched fused ZFP encode: the concatenated 4^3 blocks of any
+    number of leaves -> one **flat contiguous** uint32 word arena (plus the
+    emax/gtops header sidecars) in a single launch.
+
+    ZFP is fixed-rate, so the arena layout needs no scan and no host sync:
+    a leaf owning block rows ``[b0, b1)`` owns arena words ``[b0 * wpb,
+    b1 * wpb)`` analytically (``wpb = payload_words(rate)``), and each
+    leaf's slice is byte-identical to its per-leaf
+    :func:`fused_compress_blocks` stream — the batch grid axis already
+    walks blocks, so batching leaves is pure concatenation.
+    """
+    words, emax, gtops = fused_compress_blocks(blocks, rate, interpret=interpret)
+    return words.reshape(-1), emax, gtops
+
+
+def fused_decompress_arena(arena: jax.Array, emax: jax.Array, gtops: jax.Array,
+                           rate: int, interpret: bool | None = None) -> jax.Array:
+    """Inverse of :func:`fused_compress_arena`: flat word arena + header
+    sidecars -> (NB, 4, 4, 4) f32 blocks, one launch for every leaf."""
+    wpb = zfp_core.payload_words(rate)
+    return fused_decompress_blocks(arena.reshape(-1, wpb), emax, gtops, rate,
+                                   interpret=interpret)
+
+
 def _fused_decode_kernel(words_ref, emax_ref, gtops_ref, blocks_ref, *, rate):
     budget = rate * 64 - zfp_core._HEADER_BITS
     words = words_ref[...]  # (T, wpb)

@@ -27,52 +27,105 @@ from repro.train import loop as loop_lib
 from repro.train import step as step_lib
 
 
-def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20):
+def _leaf_entries(state, min_bytes: int):
+    """(key, leaf) pairs of the float leaves worth snapshotting."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        if not hasattr(leaf, "dtype") or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if leaf.ndim < 1 or leaf.nbytes < min_bytes:
+            continue
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
+                      arena: bool = True):
     """Snapshot hook for ``loop_lib.LoopConfig.snapshot_hook``: compress
-    every float leaf >= ``min_bytes`` shard-locally (halo-exchanged TPU-SZ
-    over the leaf's own partition spec) and persist the per-shard streams
-    through the checkpoint manager's ``leaf_i_sNNN.bin`` writer.  The raw
-    leaves never gather to host — only compressed bytes cross the PCIe/DCN
-    boundary, which is the paper's in-situ snapshot story applied to
-    training state."""
+    every float leaf >= ``min_bytes`` shard-locally (halo-exchanged TPU-SZ)
+    and persist the streams through the checkpoint manager.  The raw leaves
+    never gather to host — only compressed bytes cross the PCIe/DCN
+    boundary, the paper's in-situ snapshot story applied to training state.
+
+    ``arena=True`` (default) is the **arena-batched** path: leaves flatten
+    and size-bucket into megabatches (``dist.insitu.plan_arena``) and the
+    hook compiles **one function per bucket signature, not per leaf** — a
+    snapshot issues O(#buckets) launches, one halo permute and one pmax per
+    bucket, and one ``used`` readback + one D2H copy per bucket arena; the
+    manager writes one ``arena_iNNNNN_sNNN.bin`` per (bucket, shard).
+    Arena-ineligible leaves (non-leading-dim partitions) fall back to the
+    legacy per-leaf path, logged once.  ``arena=False`` is that per-leaf
+    path for every leaf — the PR-4 format, kept restorable and selectable
+    (``--insitu-per-leaf``)."""
     from repro.dist import insitu
 
     snap = CheckpointManager(out_dir, keep_last=2, async_save=False)
-    compiled: dict = {}  # leaf key -> jitted compress (or None: skip, logged)
+    compiled: dict = {}  # leaf key -> jitted per-leaf compress (or None)
+    cache: dict = {"sig": None, "buckets": [], "fns": [], "legacy": []}
+
+    def _spec(leaf):
+        return getattr(getattr(leaf, "sharding", None), "spec", None)
+
+    def _legacy_compress(key, leaf, fields) -> None:
+        if key not in compiled:
+            try:
+                fn = jax.jit(lambda a, _s=_spec(leaf): insitu.sharded_compress(
+                    a, "sz", mesh, _s, eb=eb))
+                stream = fn(leaf)  # validation errors surface at trace
+                compiled[key] = fn
+            except (NotImplementedError, ValueError) as e:
+                # composed-axis / non-divisible / oversized leaves — say so
+                # once instead of silently shrinking the snapshot
+                print(f"  in-situ snapshot: skipping {key}: {e}")
+                compiled[key] = None
+                return
+        elif compiled[key] is None:
+            return
+        else:
+            stream = compiled[key](leaf)
+        fields[key] = insitu.to_host(stream)
+
+    def _replan(named) -> None:
+        entries = []
+        for key, leaf in named:
+            spec = _spec(leaf)
+            entries.append((key, leaf.shape, leaf.dtype,
+                            spec if spec is not None else jax.sharding.PartitionSpec()))
+        buckets, skipped = insitu.plan_arena(entries, mesh)
+        for key, why in skipped:
+            print(f"  in-situ snapshot: {key} not arena-eligible ({why}); "
+                  "using the per-leaf path")
+        # one compiled function per bucket *signature* — reused for every
+        # later snapshot of the same state tree
+        fns = [jax.jit(lambda *ls, _b=b: insitu.sharded_compress_arena(
+            list(ls), _b, mesh, eb)) for b in buckets]
+        cache.update(buckets=buckets, fns=fns, legacy=[k for k, _ in skipped])
 
     def hook(step: int, state) -> None:
+        named = _leaf_entries(state, min_bytes)
         fields = {}
-        for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
-            if not hasattr(leaf, "dtype") or not jnp.issubdtype(leaf.dtype, jnp.floating):
-                continue
-            if leaf.ndim < 1 or leaf.ndim > 3 or leaf.nbytes < min_bytes:
-                continue
-            key = jax.tree_util.keystr(path)
-            if key not in compiled:
-                # resolve the spec from the concrete leaf (a traced arg has
-                # no .sharding) and compile once; later checkpoints reuse
-                # the jitted function instead of re-tracing per leaf
-                spec = getattr(getattr(leaf, "sharding", None), "spec", None)
-                try:
-                    fn = jax.jit(lambda a, _s=spec: insitu.sharded_compress(
-                        a, "sz", mesh, _s, eb=eb))
-                    stream = fn(leaf)  # validation errors surface at trace
-                    compiled[key] = fn
-                except (NotImplementedError, ValueError) as e:
-                    # composed-axis / non-divisible / oversized leaves —
-                    # say so once instead of silently shrinking the snapshot
-                    print(f"  in-situ snapshot: skipping {key}: {e}")
-                    compiled[key] = None
-                    continue
-            elif compiled[key] is None:
-                continue
-            else:
-                stream = compiled[key](leaf)
-            fields[key] = insitu.to_host(stream)
+        if arena:
+            sig = tuple((k, tuple(l.shape), str(l.dtype)) for k, l in named)
+            if cache["sig"] != sig:
+                _replan(named)
+                cache["sig"] = sig
+            by_key = dict(named)
+            for k, (b, fn) in enumerate(zip(cache["buckets"], cache["fns"])):
+                fields[f"arena{k:03d}"] = insitu.arena_to_host(
+                    fn(*[by_key[nm] for nm in b.names]))
+            for key in cache["legacy"]:
+                _legacy_compress(key, by_key[key], fields)
+        else:
+            for key, leaf in named:
+                _legacy_compress(key, leaf, fields)
         if fields:
-            snap.save(step, fields, extra={"eb": eb, "n_fields": len(fields)})
+            n_leaves = sum(len(v.names) if hasattr(v, "names") else 1
+                           for v in fields.values())
+            snap.save(step, fields, extra={"eb": eb, "n_fields": n_leaves,
+                                           "arena": bool(arena)})
             res = snap.wait()
-            print(f"  in-situ snapshot step {step}: {len(fields)} fields, "
+            print(f"  in-situ snapshot step {step}: {n_leaves} fields in "
+                  f"{len(fields)} payload groups, "
                   f"{res.ratio:.2f}x on-device compression")
 
     return hook
@@ -96,6 +149,10 @@ def main(argv=None) -> int:
                          "per shard, dist.insitu) into <ckpt-dir>/fields")
     ap.add_argument("--insitu-eb", type=float, default=1e-3,
                     help="ABS error bound for --insitu-snapshot")
+    ap.add_argument("--insitu-per-leaf", action="store_true",
+                    help="disable arena batching for --insitu-snapshot: one "
+                         "launch + one stream file per leaf (the legacy "
+                         "PR-4 format) instead of one per size bucket")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -136,7 +193,8 @@ def main(argv=None) -> int:
 
         policy = CodecPolicy(mode="sz_pwrel", eb=1e-4) if args.lossy_ckpt else CodecPolicy()
         ckpt = CheckpointManager(args.ckpt_dir, policy=policy)
-        hook = (build_insitu_hook(mesh, f"{args.ckpt_dir}/fields", args.insitu_eb)
+        hook = (build_insitu_hook(mesh, f"{args.ckpt_dir}/fields", args.insitu_eb,
+                                  arena=not args.insitu_per_leaf)
                 if args.insitu_snapshot else None)
 
         def put(b):

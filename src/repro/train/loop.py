@@ -51,6 +51,11 @@ class LoopResult:
     stragglers: list
     preempted: bool
     nan_abort: bool
+    # wall-clock of each snapshot_hook call — the number the arena-batched
+    # snapshot path (dist.insitu.plan_arena + one launch per bucket) is
+    # accountable to; benchmarks/throughput.py::snapshot_dispatch tracks the
+    # same quantity outside the loop
+    snapshot_s: list = dataclasses.field(default_factory=list)
 
 
 def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
@@ -75,9 +80,15 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
 
     losses: list[float] = []
     stragglers: list[int] = []
+    snapshot_s: list[float] = []
     nan_abort = False
     step = start_step
     hb = Path(cfg.heartbeat_path) if cfg.heartbeat_path else None
+
+    def _snapshot(s, st) -> None:
+        t = time.time()
+        cfg.snapshot_hook(s, st)
+        snapshot_s.append(time.time() - t)
 
     try:
         while step < cfg.total_steps:
@@ -104,18 +115,19 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
                 ckpt.save(step, state, extra={"data_step": step})
                 if cfg.snapshot_hook is not None:
-                    cfg.snapshot_hook(step, state)
+                    _snapshot(step, state)
                     snapped = True
             if preempted["flag"]:
                 ckpt.save(step, state, extra={"data_step": step, "preempted": True})
                 if cfg.snapshot_hook is not None and not snapped:
                     # the preemption save is a checkpoint boundary too — the
                     # field snapshot must not lag the state you restart from
-                    cfg.snapshot_hook(step, state)
+                    _snapshot(step, state)
                 break
     finally:
         ckpt.wait()
         signal.signal(signal.SIGTERM, old_term)
         signal.signal(signal.SIGINT, old_int)
 
-    return state, LoopResult(step, losses, stragglers, preempted["flag"], nan_abort)
+    return state, LoopResult(step, losses, stragglers, preempted["flag"],
+                             nan_abort, snapshot_s)

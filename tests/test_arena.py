@@ -1,0 +1,412 @@
+"""Arena-batched snapshot compression (`repro.core.arena` + the
+`dist.insitu` bucket path).
+
+The load-bearing property is **byte-identity**: each leaf's slice of a
+bucket arena must equal the stream the per-leaf path produces today
+(``sz.compress`` on the flat leaf; ``insitu.sharded_compress`` per shard),
+so batching whole pytrees into O(#buckets) launches changes *nothing* about
+the bits on disk.  Covered here: the shared compaction primitives, the
+batched row packer, bucket planning, the hypothesis cross-path property
+(with a deterministic fallback sweep, house style), the batched fused
+Pallas kernels, the fixed-rate ZFP arena, and the checkpoint-manager arena
+format (one ``arena_iNNNNN_sNNN.bin`` per shard + descriptor index,
+legacy per-leaf format still restorable).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import arena, bitpack
+from repro.core import sz as sz_core
+from repro.core import zfp as zfp_core
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+
+# ------------------------------------------------------------ primitives ---
+
+
+class TestCompaction:
+    def test_exclusive_cumsum(self):
+        x = jnp.asarray([3, 0, 5, 1], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(bitpack.exclusive_cumsum(x)),
+                                      [0, 3, 3, 8])
+
+    def test_compact_streams_matches_naive_concat(self):
+        rng = np.random.default_rng(0)
+        rows = rng.integers(0, 2**32, size=(7, 11), dtype=np.uint32)
+        counts = rng.integers(0, 12, size=7).astype(np.int32)
+        cap = int(counts.sum()) + 5
+        words, offsets, used = bitpack.compact_streams(
+            jnp.asarray(rows), jnp.asarray(counts), cap)
+        ref = np.concatenate([rows[r, : counts[r]] for r in range(7)])
+        assert int(used) == len(ref)
+        np.testing.assert_array_equal(np.asarray(words)[: len(ref)], ref)
+        assert (np.asarray(words)[len(ref):] == 0).all()
+        np.testing.assert_array_equal(np.asarray(offsets),
+                                      np.cumsum(counts) - counts)
+
+    def test_compact_streams_zero_count_rows(self):
+        rows = jnp.zeros((3, 4), jnp.uint32).at[1, :2].set(jnp.uint32(9))
+        words, offsets, used = bitpack.compact_streams(
+            rows, jnp.asarray([0, 2, 0]), 6)
+        np.testing.assert_array_equal(np.asarray(words), [9, 9, 0, 0, 0, 0])
+        assert int(used) == 2
+
+    def test_fused_assembler_uses_shared_compaction(self):
+        # the dedup: sz_fused._assemble_stream must be byte-identical to
+        # pack_codes on the same codes (the embedded-reference pin for the
+        # fused path lives in test_kernels; this pins the refactor)
+        from repro.kernels import sz_fused as szf
+
+        rng = np.random.default_rng(1)
+        codes = rng.integers(-(2**10), 2**10, size=(1024, 64)).astype(np.int32)
+        u = bitpack.zigzag(jnp.asarray(codes.reshape(-1))).reshape(1024, 64)
+        width = jnp.max(bitpack.bitlength(u), axis=1)
+        block_words = szf._pack_blocks(u, width)
+        packed = szf._assemble_stream(block_words, width, codes.size)
+        ref = bitpack.pack_codes(jnp.asarray(codes.reshape(-1)))
+        np.testing.assert_array_equal(np.asarray(packed.words), np.asarray(ref.words))
+        assert int(packed.total_bits) == int(ref.total_bits)
+
+
+class TestRowPacker:
+    @pytest.mark.parametrize("ns", [(256,), (100, 64, 1, 200, 3), (64, 64)])
+    def test_byte_identity_vs_per_leaf(self, ns):
+        rng = np.random.default_rng(sum(ns))
+        P = max(arena.row_length(n) for n in ns)
+        codes = np.zeros((len(ns), P), np.int32)
+        for b, n in enumerate(ns):
+            codes[b, :n] = rng.integers(-(2**20), 2**20, size=n)
+        rows, counts, widths, tb = bitpack.pack_codes_rows(
+            jnp.asarray(codes), jnp.asarray(ns))
+        for b, n in enumerate(ns):
+            ref = bitpack.pack_codes(jnp.asarray(codes[b, :n]))
+            store = bitpack.to_storage(ref)
+            assert int(counts[b]) == len(store["words"])
+            np.testing.assert_array_equal(
+                np.asarray(rows)[b, : int(counts[b])], store["words"])
+            nb = -(-n // bitpack.BLOCK)
+            np.testing.assert_array_equal(np.asarray(widths)[b, :nb],
+                                          store["widths"])
+            assert (np.asarray(widths)[b, nb:] == 0).all()
+            assert int(tb[b]) == int(ref.total_bits)
+        back = np.asarray(bitpack.unpack_codes_rows(rows, widths))
+        np.testing.assert_array_equal(back, codes)
+
+    def test_extreme_codes(self):
+        codes = np.zeros((2, 64), np.int32)
+        codes[0, :7] = [0, 1, -1, 2**30, -(2**30), 2**31 - 1, -(2**31)]
+        rows, counts, widths, _ = bitpack.pack_codes_rows(
+            jnp.asarray(codes), jnp.asarray([7, 64]))
+        back = np.asarray(bitpack.unpack_codes_rows(rows, widths))
+        np.testing.assert_array_equal(back, codes)
+
+
+# -------------------------------------------------------------- planning ---
+
+
+class TestPlanning:
+    def test_row_length_pow2_blocks(self):
+        assert arena.row_length(1) == 64
+        assert arena.row_length(64) == 64
+        assert arena.row_length(65) == 128
+        assert arena.row_length(129) == 256
+        assert arena.row_length(64 * 64) == 64 * 64
+        assert arena.row_length(64 * 64 + 1) == 64 * 128
+
+    def test_buckets_are_o_log_not_o_leaves(self):
+        # 200 leaves, sizes spread over a 2^10 range -> <= ~11 buckets
+        entries = [(f"l{i}", (37 + (i * 97) % 60000,), "float32")
+                   for i in range(200)]
+        plan = arena.plan_buckets(entries)
+        assert len(plan) <= 12, [b.padded for b in plan]
+        assert sum(b.rows for b in plan) == 200
+
+    def test_budget_splits_buckets(self):
+        entries = [(f"l{i}", (1024,), "float32") for i in range(8)]
+        plan = arena.plan_buckets(entries, elem_budget=3 * 1024)
+        assert all(b.rows <= 3 for b in plan)
+        assert sum(b.rows for b in plan) == 8
+
+    def test_plan_deterministic(self):
+        entries = [("b", (100,), "float32"), ("a", (90,), "float32"),
+                   ("c", (5000,), "bfloat16")]
+        p1, p2 = arena.plan_buckets(entries), arena.plan_buckets(entries)
+        assert p1 == p2
+        assert p1[0].names == ("b", "a")  # insertion order inside a bucket
+
+
+# ------------------------------------------- cross-path property (core) ----
+
+
+def _assert_bucket_matches_per_leaf(named, eb):
+    """The acceptance property: compress a pytree's leaves through the
+    arena; every leaf's stream slice must be byte-identical to the per-leaf
+    coder on the flat leaf, the batched decode bitwise equal to the
+    per-leaf decode, and the host restore equal to both."""
+    plan = arena.plan_buckets([(k, v.shape, v.dtype) for k, v in named])
+    by_key = dict(named)
+    for b in plan:
+        leaves = [jnp.asarray(by_key[nm]) for nm in b.names]
+        a = arena.sz_compress_bucket(leaves, b, eb)
+        h = arena.to_host(a, b)
+        dec = arena.sz_decompress_bucket(a, b)
+        back = arena.host_restore(
+            arena.host_meta(h), [arena.payload_encode(s) for s in h.shards])
+        for i, nm in enumerate(b.names):
+            flat = jnp.asarray(by_key[nm]).astype(jnp.float32).reshape(-1)
+            ref = sz_core.compress(flat, eb)
+            store = bitpack.to_storage(ref.packed)
+            ls = arena.leaf_stream(h, i)
+            np.testing.assert_array_equal(ls["words"], store["words"])
+            np.testing.assert_array_equal(ls["widths"], store["widths"])
+            assert ls["total_bits"] == int(ref.packed.total_bits)
+            assert float(np.asarray(a.eb_i)[i]) == float(np.asarray(ref.eb))
+            ref_x = np.asarray(sz_core.decompress(ref))
+            got = np.asarray(dec[i], np.float32).reshape(-1)
+            exp = np.asarray(
+                jnp.asarray(ref_x).reshape(b.shapes[i]).astype(b.dtypes[i]),
+                np.float32).reshape(-1)
+            np.testing.assert_array_equal(got, exp)
+            np.testing.assert_array_equal(
+                back[nm].astype(np.float32).reshape(-1), got)
+            assert back[nm].dtype == np.dtype(b.dtypes[i])
+        # accounting: stored = live arena words + the descriptor sidecars
+        words_b = int(np.sum(np.asarray(a.counts))) * 4
+        sidecar_b = sum(int(np.asarray(h.shards[0][k]).nbytes)
+                        for k in ("widths", "offsets", "counts", "total_bits"))
+        assert h.nbytes_stored() == words_b + sidecar_b
+
+
+def _random_tree(seed):
+    rng = np.random.default_rng(seed)
+    n_leaves = int(rng.integers(1, 7))
+    named = []
+    for i in range(n_leaves):
+        rank = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(1, 14)) for _ in range(rank))
+        dtype = [np.float32, "bfloat16"][int(rng.integers(0, 2))]
+        x = (rng.normal(size=shape) * 10.0 ** int(rng.integers(-1, 3))).astype(np.float32)
+        named.append((f"leaf{i}", jnp.asarray(x).astype(dtype)))
+    eb = float(10.0 ** rng.integers(-4, 0))
+    return named, eb
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_arena_matches_per_leaf_property(seed):
+        """Random leaf-count/shape/dtype pytrees: the arena path is
+        byte-identical per leaf to the per-leaf path."""
+        named, eb = _random_tree(seed)
+        _assert_bucket_matches_per_leaf(named, eb)
+
+else:  # deterministic guard, house style
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_arena_matches_per_leaf_property(seed):
+        named, eb = _random_tree(seed)
+        _assert_bucket_matches_per_leaf(named, eb)
+
+
+def test_arena_zero_and_constant_leaves():
+    # degenerate widths: all-zero and constant leaves must round-trip
+    named = [("z", jnp.zeros((64,), jnp.float32)),
+             ("c", jnp.full((100,), 3.25, jnp.float32))]
+    _assert_bucket_matches_per_leaf(named, 1e-2)
+
+
+def test_host_restore_rejects_sparse_payloads():
+    named = [("w", jnp.asarray(np.random.default_rng(0)
+                               .normal(size=(32, 8)).astype(np.float32)))]
+    b = arena.plan_buckets([(k, v.shape, v.dtype) for k, v in named])[0]
+    a = arena.sz_compress_bucket([named[0][1]], b, 1e-3)
+    h = arena.to_host(a, b)
+    meta = arena.host_meta(h)
+    meta["arena"]["grid"] = 2  # claims 2 shards, 1 payload present
+    with pytest.raises(IOError, match="payload"):
+        arena.host_restore(meta, [arena.payload_encode(h.shards[0])])
+
+
+# --------------------------------------------------- fused batched kernel --
+
+
+class TestFusedBatched:
+    def test_batched_kernel_byte_identical_per_row(self):
+        from repro.kernels import sz_fused as szf
+
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(2, 8, 64, 128)).astype(np.float32) * 20)
+        eb = jnp.asarray([0.5, 0.05], jnp.float32)
+        ar, widths, offs, counts, tb, used = szf.fused_compress_batched(x, eb)
+        pos = 0
+        for b in range(2):
+            ref = szf.fused_compress(x[b], eb[b])
+            store = bitpack.to_storage(ref)
+            assert int(offs[b]) == pos
+            assert int(counts[b]) == len(store["words"])
+            np.testing.assert_array_equal(
+                np.asarray(ar)[pos : pos + int(counts[b])], store["words"])
+            np.testing.assert_array_equal(np.asarray(widths)[b], store["widths"])
+            assert int(tb[b]) == int(ref.total_bits)
+            pos += int(counts[b])
+        assert int(used) == pos
+        y = szf.fused_decompress_batched(ar, widths, (8, 64, 128), eb)
+        for b in range(2):
+            ref = szf.fused_decompress(szf.fused_compress(x[b], eb[b]),
+                                       (8, 64, 128), eb[b])
+            np.testing.assert_array_equal(np.asarray(y[b]), np.asarray(ref))
+
+
+# --------------------------------------------------------------- ZFP arena --
+
+
+class TestZfpArena:
+    def test_leaf_slices_byte_identical(self):
+        rng = np.random.default_rng(3)
+        leaves = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+                  for s in [(8, 8, 8), (12, 8, 4), (6, 5, 9)]]
+        a = arena.zfp_compress_bucket(leaves, 8)
+        assert a.ranges == (0,) + tuple(np.cumsum(
+            [zfp_core.n_blocks_for(x.shape) for x in leaves]))
+        for i, x in enumerate(leaves):
+            ref = zfp_core.compress(x, 8)
+            v = arena.zfp_leaf_view(a, i, x.shape)
+            np.testing.assert_array_equal(np.asarray(v.words), np.asarray(ref.words))
+            np.testing.assert_array_equal(np.asarray(v.emax), np.asarray(ref.emax))
+            np.testing.assert_array_equal(np.asarray(v.gtops), np.asarray(ref.gtops))
+        dec = arena.zfp_decompress_bucket(a, [x.shape for x in leaves])
+        for i, x in enumerate(leaves):
+            np.testing.assert_array_equal(
+                np.asarray(dec[i]),
+                np.asarray(zfp_core.decompress(zfp_core.compress(x, 8))))
+
+    def test_fused_arena_wrappers_match_blocks(self):
+        from repro.kernels import zfp_fused as zf
+
+        rng = np.random.default_rng(4)
+        blocks = jnp.asarray(rng.normal(size=(zf.BLOCKS_PER_TILE, 4, 4, 4))
+                             .astype(np.float32))
+        flat, emax, gtops = zf.fused_compress_arena(blocks, 6)
+        words, emax2, gtops2 = zf.fused_compress_blocks(blocks, 6)
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(words).reshape(-1))
+        back = zf.fused_decompress_arena(flat, emax, gtops, 6)
+        np.testing.assert_array_equal(
+            np.asarray(back),
+            np.asarray(zf.fused_decompress_blocks(words, emax2, gtops2, 6)))
+
+
+# --------------------------------------------------- sharded bucket path ---
+
+
+def _subset_mesh(n):
+    devs = jax.devices()
+    if n > len(devs):
+        pytest.skip(f"needs {n} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(n), ("data",))
+
+
+class TestShardedArena:
+    def test_plan_rejects_non_leading_partitions(self):
+        from repro.dist import insitu
+
+        mesh = jax.sharding.AbstractMesh((2,), ("data",))
+        entries = [("ok", (8, 4), np.float32, PS("data")),
+                   ("bad", (8, 4), np.float32, PS(None, "data")),
+                   ("odd", (7,), np.float32, PS("data"))]
+        buckets, skipped = insitu.plan_arena(entries, mesh)
+        assert [b.names for b in buckets] == [("ok",)]
+        assert sorted(k for k, _ in skipped) == ["bad", "odd"]
+
+    @pytest.mark.parametrize("n_dev", [1, 2])
+    def test_sharded_bucket_matches_per_leaf_and_single_device(self, n_dev):
+        """Per-shard byte-identity with the per-leaf sharded path AND
+        bitwise round-trip equality with the single-device flat path (sized
+        to the available devices; real under the CI dist step)."""
+        from jax.sharding import NamedSharding
+
+        from repro.dist import insitu
+
+        mesh = _subset_mesh(n_dev)
+        rng = np.random.default_rng(n_dev)
+        leaves = {"w1": rng.normal(size=(16, 24)).astype(np.float32) * 4,
+                  "w2": rng.normal(size=(16, 24)).astype(np.float32),
+                  "b": rng.normal(size=(64,)).astype(np.float32)}
+        spec = PS("data")
+        sharded = {k: jax.device_put(jnp.asarray(v), NamedSharding(mesh, spec))
+                   for k, v in leaves.items()}
+        entries = [(k, v.shape, v.dtype, spec) for k, v in leaves.items()]
+        buckets, skipped = insitu.plan_arena(entries, mesh)
+        assert not skipped
+        EB = 1e-2
+        for b in buckets:
+            stream = insitu.sharded_compress_arena(
+                [sharded[nm] for nm in b.names], b, mesh, EB)
+            h = insitu.arena_to_host(stream)
+            for i, nm in enumerate(b.names):
+                flat = jnp.asarray(leaves[nm]).reshape(-1)
+                spec1 = PS("data") if b.axis else PS()
+                ref = insitu.to_host(insitu.sharded_compress(
+                    jax.device_put(flat, NamedSharding(mesh, spec1)),
+                    "sz", mesh, spec1, eb=EB))
+                for s in range(b.grid):
+                    ls = arena.leaf_stream(h, i, s)
+                    np.testing.assert_array_equal(ls["words"],
+                                                  ref.shards[s][1]["words"])
+                    np.testing.assert_array_equal(ls["widths"],
+                                                  ref.shards[s][1]["widths"])
+            dec = insitu.sharded_decompress_arena(stream, mesh)
+            back = arena.host_restore(
+                arena.host_meta(h), [arena.payload_encode(s) for s in h.shards])
+            for i, nm in enumerate(b.names):
+                flat = jnp.asarray(leaves[nm]).reshape(-1)
+                ref = np.asarray(sz_core.decompress(sz_core.compress(flat, EB)))
+                np.testing.assert_array_equal(np.asarray(dec[i]).reshape(-1), ref)
+                np.testing.assert_array_equal(back[nm], np.asarray(dec[i]))
+
+
+# ----------------------------------------------------- checkpoint format ---
+
+
+class TestManagerArenaFormat:
+    def _snapshot(self, tmp_path, rng):
+        from repro.checkpoint.manager import CheckpointManager
+
+        tree = {"w": rng.normal(size=(48, 32)).astype(np.float32),
+                "b": rng.normal(size=(96,)).astype(np.float32)}
+        plan = arena.plan_for_tree(tree)
+        state = {}
+        for k, b in enumerate(plan):
+            a = arena.sz_compress_bucket(
+                [jnp.asarray(tree[nm.strip("['']")]) for nm in b.names], b, 1e-3)
+            state[f"arena{k:03d}"] = arena.to_host(a, b)
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        mgr.save(1, state)
+        return tree, plan, state, mgr
+
+    def test_one_file_per_bucket_and_restore(self, tmp_path):
+        tree, plan, state, mgr = self._snapshot(tmp_path, np.random.default_rng(5))
+        d = sorted(tmp_path.glob("step_*"))[0]
+        files = sorted(p.name for p in d.glob("*.bin"))
+        assert files == [f"arena_{i:05d}_s000.bin" for i in range(len(plan))]
+        out, _ = mgr.restore(state_like={k: 0 for k in state})
+        for k, b in enumerate(plan):
+            got = out[f"arena{k:03d}"]
+            for nm in b.names:
+                ref = tree[nm.strip("['']")]
+                assert np.abs(got[nm] - ref).max() <= 1e-3 * (1 + 1e-5)
+
+    def test_corruption_detected(self, tmp_path):
+        _, _, state, mgr = self._snapshot(tmp_path, np.random.default_rng(6))
+        d = sorted(tmp_path.glob("step_*"))[0]
+        blob = sorted(d.glob("arena_*.bin"))[0]
+        raw = bytearray(blob.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        blob.write_bytes(bytes(raw))
+        with pytest.raises(IOError):
+            mgr.restore(state_like={k: 0 for k in state})
