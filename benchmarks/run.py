@@ -48,6 +48,8 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
         "insitu": throughput.insitu_snapshot(n=n),
         "snapshot_dispatch": throughput.snapshot_dispatch(
             n_leaves=60 if smoke else 200, iters=2 if smoke else 5),
+        "snapshot_overlap": throughput.snapshot_overlap(
+            snaps=2 if smoke else 3),
     }
     if not smoke:
         record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
@@ -80,6 +82,7 @@ def main() -> None:
         print("dist:", record["dist"])
         print("insitu:", record["insitu"])
         print("snapshot_dispatch:", record["snapshot_dispatch"])
+        print("snapshot_overlap:", record["snapshot_overlap"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         return
@@ -122,6 +125,7 @@ def main() -> None:
     print("dist:", record["dist"])
     print("insitu:", record["insitu"])
     print("snapshot_dispatch:", record["snapshot_dispatch"])
+    print("snapshot_overlap:", record["snapshot_overlap"])
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

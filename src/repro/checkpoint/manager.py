@@ -9,9 +9,19 @@ Layout (one directory per step, atomic rename on completion):
         leaf_00000.npy|.szc  raw npy or TPU-SZ stream (+ zstd on the side)
 
 Design points for 1000+ node posture:
-  * async save: device->host transfer happens on the caller thread (cheap,
-    sharded), serialization + fsync on a background thread; training never
-    blocks on the filesystem;
+  * async save: device->host transfer of *raw* leaves happens on the caller
+    thread (they may alias donated train-step buffers); already-compressed
+    snapshot buckets arrive as ``PendingHostArena`` handles whose device
+    buffers are snapshot-owned, so their D2H resolves later.  Payload
+    encode + disk I/O run on a persistent background **drain thread** fed
+    by a bounded queue (``max_in_flight``, default 2): training never
+    blocks on the filesystem until that many snapshots are already in
+    flight, and exceptions raised on the drain thread are captured and
+    re-raised on the next ``save()``/``wait()`` instead of vanishing;
+  * atomic finalization: every payload is written + fsync'd into the tmp
+    dir, the manifest is written **last** (also fsync'd, then the dir), and
+    only then does the tmp dir rename into place — a crash mid-drain never
+    leaves a restorable-looking partial snapshot (DESIGN.md §9);
   * per-shard encoding: leaves that live sharded on the mesh (via
     ``repro.dist.sharding`` specs) are pulled and compressed one shard at a
     time — the global array is never materialized on the host, which is
@@ -46,10 +56,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import queue
+import shutil
+import sys
 import threading
 import zlib
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -83,6 +97,23 @@ class SaveResult:
 
 def _crc(buf: bytes) -> int:
     return zlib.crc32(buf) & 0xFFFFFFFF
+
+
+def _write_bytes(path: Path, data: bytes) -> None:
+    """Write + flush + fsync one payload file.  Module-level so the
+    kill-mid-write tests can fault-inject a failing disk."""
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _encode_leaf(arr: np.ndarray, policy: CodecPolicy) -> tuple[bytes, dict]:
@@ -206,16 +237,20 @@ def _to_host(x: Any) -> Any:
     ``_ShardedLeaf`` (one host block per unique shard index); in-situ
     pre-compressed leaves (``dist.insitu.HostShardedStream`` — already
     host-side compressed bytes, never the raw field) pass through;
-    everything else as a plain np.ndarray."""
-    import sys
+    everything else as a plain np.ndarray.
 
+    Raw leaves materialize *here*, on the caller thread — they may alias
+    train-step buffers the next (donating) step will overwrite.  Deferred
+    arena fetches (``core.arena.PendingHostArena``) pass through unresolved:
+    their device buffers are snapshot-owned staging copies, so the drain
+    thread can resolve them steps later."""
     ins = sys.modules.get("repro.dist.insitu")
     if ins is not None and isinstance(x, ins.HostShardedStream):
         return x  # already host-side compressed bytes; a stream leaf can
     # only appear in a state tree if its module is loaded, so the guard
     # keeps plain checkpointing decoupled from the dist import chain
     ar = sys.modules.get("repro.core.arena")
-    if ar is not None and isinstance(x, ar.HostArena):
+    if ar is not None and isinstance(x, (ar.HostArena, ar.PendingHostArena)):
         return x  # a whole bucket of leaves, already compressed on-device
     shards = getattr(x, "addressable_shards", None)
     if shards is None or len(shards) <= 1:
@@ -236,44 +271,106 @@ def _to_host(x: Any) -> Any:
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep_last: int = 3,
-                 policy: CodecPolicy = CodecPolicy(), async_save: bool = True):
+                 policy: CodecPolicy = CodecPolicy(), async_save: bool = True,
+                 max_in_flight: int = 2):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.policy = policy
         self.async_save = async_save
-        self._thread: Optional[threading.Thread] = None
+        self.max_in_flight = max(1, int(max_in_flight))
+        self._queue: Optional[queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._error_lock = threading.Lock()
         self._last_result: Optional[SaveResult] = None
 
     # ------------------------------------------------------------- save --
-    def save(self, step: int, state: Any, extra: Optional[dict] = None) -> None:
-        """Snapshot `state`; device->host happens here, disk I/O on a
-        background thread (async). Blocks only if a previous save is live."""
-        self.wait()
+    def save(self, step: int, state: Any, extra: Optional[dict] = None,
+             on_complete: Optional[Callable[[int], None]] = None) -> None:
+        """Snapshot `state`.  Device->host of raw leaves happens here (they
+        may alias donated buffers); payload encode + disk I/O drain on the
+        persistent background thread.  Blocks only when ``max_in_flight``
+        snapshots are already queued (backpressure), never on the disk
+        itself.  A failure on the drain thread re-raises here or in
+        ``wait()``.  ``on_complete(step)`` fires on the drain thread once
+        the snapshot is durable (or failed) — the overlapped snapshot hook
+        passes ``SnapshotSlots.release`` to recycle its device slot."""
+        self._raise_pending()
         leaves, treedef = jax.tree_util.tree_flatten(state)
         host = [_to_host(x) for x in leaves]  # per-shard, never gathers
         treedef_str = str(treedef)
         if self.async_save:
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host, treedef_str, extra or {}),
-                daemon=True)
-            self._thread.start()
+            self._ensure_worker()
+            # blocks iff max_in_flight snapshots are already queued/draining
+            self._queue.put((step, host, treedef_str, extra or {}, on_complete))
         else:
-            self._write(step, host, treedef_str, extra or {})
+            try:
+                self._write(step, host, treedef_str, extra or {})
+            finally:
+                if on_complete is not None:
+                    on_complete(step)
+
+    def _ensure_worker(self) -> None:
+        if self._queue is None:
+            self._queue = queue.Queue(maxsize=self.max_in_flight)
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True,
+                                            name="ckpt-drain")
+            self._worker.start()
+
+    def _drain(self) -> None:
+        while True:
+            step, host, treedef_str, extra, on_complete = self._queue.get()
+            try:
+                self._write(step, host, treedef_str, extra)
+            except BaseException as e:
+                self._set_error(e)
+            finally:
+                try:
+                    if on_complete is not None:
+                        on_complete(step)
+                except BaseException as e:
+                    self._set_error(e)
+                self._queue.task_done()
+
+    def _set_error(self, e: BaseException) -> None:
+        with self._error_lock:
+            if self._error is None:  # first failure wins
+                self._error = e
+
+    def _raise_pending(self) -> None:
+        with self._error_lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
 
     def _write(self, step: int, host: list, treedef_str: str, extra: dict) -> None:
         tmp = self.dir / f".tmp_step_{step:09d}"
         final = self.dir / f"step_{step:09d}"
+        try:
+            self._write_into(tmp, final, step, host, treedef_str, extra)
+        except BaseException:
+            # a partial tmp dir is invisible to restore (only step_* dirs
+            # are scanned), but don't leave it to shadow a retried save
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    def _write_into(self, tmp: Path, final: Path, step: int, host: list,
+                    treedef_str: str, extra: dict) -> None:
         tmp.mkdir(parents=True, exist_ok=True)
         manifest: dict[str, Any] = {"step": step, "treedef": treedef_str,
                                     "extra": extra, "leaves": []}
-        import sys
-
         insitu = sys.modules.get("repro.dist.insitu")
         arena = sys.modules.get("repro.core.arena")
 
         raw = stored = 0
         for i, arr in enumerate(host):
+            if arena is not None and isinstance(arr, arena.PendingHostArena):
+                # deferred overlapped-snapshot fetch: the one `used` readback
+                # + arena D2H happen here, on the drain thread — the training
+                # thread never waited on them
+                arr = arr.result()
             if arena is not None and isinstance(arr, arena.HostArena):
                 # arena-batched snapshot bucket: one binary per shard (the
                 # compacted word arena + sidecars), per-leaf descriptors in
@@ -289,7 +386,7 @@ class CheckpointManager:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
-                    (tmp / f"arena_{i:05d}_s{j:03d}.bin").write_bytes(payload)
+                    _write_bytes(tmp / f"arena_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
@@ -310,7 +407,7 @@ class CheckpointManager:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
-                    (tmp / f"leaf_{i:05d}_s{j:03d}.bin").write_bytes(payload)
+                    _write_bytes(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
@@ -323,38 +420,48 @@ class CheckpointManager:
                                         "dtype": str(arr.dtype), "shards": []}
                 for j, (idx, block) in enumerate(arr.shards):
                     payload, bmeta = _encode_leaf(block, self.policy)
-                    (tmp / f"leaf_{i:05d}_s{j:03d}.bin").write_bytes(payload)
+                    _write_bytes(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["index"] = [list(se) for se in idx]
                     meta["shards"].append(bmeta)
                     raw += bmeta["raw_bytes"]
                     stored += bmeta["stored_bytes"]
             else:
                 payload, meta = _encode_leaf(arr, self.policy)
-                (tmp / f"leaf_{i:05d}.bin").write_bytes(payload)
+                _write_bytes(tmp / f"leaf_{i:05d}.bin", payload)
                 raw += meta["raw_bytes"]
                 stored += meta["stored_bytes"]
             manifest["leaves"].append(meta)
         manifest["digest"] = _crc(json.dumps(manifest["leaves"]).encode())
-        (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+        # manifest LAST, fsync'd, then the directory itself: after a crash,
+        # either the manifest (and everything it indexes, already durable)
+        # exists, or the snapshot is invisible — never a partial that
+        # restore would adopt
+        _write_bytes(tmp / "MANIFEST.json", json.dumps(manifest, indent=1).encode())
+        _fsync_dir(tmp)
         if final.exists():
-            import shutil
-
             shutil.rmtree(final)
         tmp.rename(final)  # atomic adoption
+        _fsync_dir(self.dir)
         self._last_result = SaveResult(step, final, raw, stored)
         self._gc()
 
     def wait(self) -> Optional[SaveResult]:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Drain every queued snapshot; re-raise any drain-thread failure;
+        return the last completed :class:`SaveResult`."""
+        if self._queue is not None:
+            self._queue.join()
+        self._raise_pending()
+        return self._last_result
+
+    @property
+    def last_result(self) -> Optional[SaveResult]:
+        """Most recently completed save (no drain, no error re-raise) — what
+        an ``on_complete`` callback may consult on the drain thread."""
         return self._last_result
 
     def _gc(self) -> None:
         steps = sorted(self.dir.glob("step_*"))
         for old in steps[: -self.keep_last]:
-            import shutil
-
             shutil.rmtree(old)
 
     # ---------------------------------------------------------- restore --

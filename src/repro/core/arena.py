@@ -18,11 +18,11 @@ terms:
      run batched over the row axis (``bitpack.pack_codes_rows``).  Rows are
      padded with zero *codes* (masked before packing), so each row's stream
      is **byte-identical** to the per-leaf coder on the unpadded leaf.
-     (Same-shape TILE-aligned 3-D *field* buckets have a fused Pallas
-     analogue — ``kernels.sz_fused.fused_compress_batched``, a leading
-     batch grid axis over the tile-blocked coder; byte-identity-tested, with
-     snapshot-hook routing tracked as a ROADMAP follow-up.  It emits the
-     tile-blocked stream, so it can never serve this flat path.);
+     (Same-shape TILE-aligned 3-D *field* buckets route through the fused
+     Pallas analogue instead — :func:`szk_compress_bucket` over
+     ``kernels.sz_fused.fused_compress_batched``, persisted as codec
+     ``arena-szk``.  It emits the tile-blocked stream, so it can never
+     serve this flat path.);
   3. **one scan, one sync**: every row's variable-length words compact into
      one contiguous uint32 arena with a single device-side exclusive scan
      over per-row word counts (``bitpack.compact_streams``).  Per-leaf
@@ -51,8 +51,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from functools import partial
-from typing import Any, Sequence
+import threading
+from functools import lru_cache, partial
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +71,12 @@ ROW_ELEM_BUDGET = 1 << 26
 
 CODEC_SZ = "arena-sz"
 CODEC_ZFP = "arena-zfp"
+# Tile-blocked kernel streams (3-D TILE-aligned leaves batched through
+# ``kernels.sz_fused.fused_compress_batched``): same arena + sidecar layout
+# as CODEC_SZ, but each row is the *tile-major* stream of the 3-D tile
+# coder, so restore decodes through the kernel path instead of the flat
+# 1-D inverse Lorenzo.
+CODEC_SZK = "arena-szk"
 
 
 # ------------------------------------------------------------- planning ----
@@ -259,10 +266,48 @@ def _sz_compress_bucket(leaves: tuple, eb, ns: tuple, padded: int) -> SZArena:
                    tuple(ns), padded)
 
 
-def sz_compress_bucket(leaves: Sequence[jax.Array], bucket: Bucket, eb) -> SZArena:
+@partial(jax.jit, static_argnames=("ns", "padded"))
+def _stage_rows(leaves: tuple, ns: tuple, padded: int) -> jax.Array:
+    return _stack_rows(leaves, ns, padded)
+
+
+def _donate_staging() -> bool:
+    # CPU ignores donation of the staging buffer (shape never aliases an
+    # output) and warns about it; accelerators recycle it into the arena.
+    return jax.default_backend() != "cpu"
+
+
+def _sz_encode_staged(rows: jax.Array, eb, ns: tuple, padded: int) -> SZArena:
+    n = jnp.asarray(ns, jnp.int32)
+    arena, widths, offsets, counts, total_bits, eb_i, used = sz_encode_rows(
+        rows, n, eb, sz_capacity(ns))
+    return SZArena(arena, widths, offsets, counts, total_bits, eb_i, used,
+                   tuple(ns), padded)
+
+
+@lru_cache(maxsize=None)
+def _sz_encode_staged_jit(donate: bool):
+    return jax.jit(_sz_encode_staged, static_argnames=("ns", "padded"),
+                   donate_argnums=(0,) if donate else ())
+
+
+def sz_compress_bucket(leaves: Sequence[jax.Array], bucket: Bucket, eb, *,
+                       staged: bool = False) -> SZArena:
     """One launch: compress a bucket's leaves into a device arena.  The jit
     cache key is the bucket signature ``(ns, P)`` — a snapshot recompiles
-    per bucket, never per leaf."""
+    per bucket, never per leaf.
+
+    ``staged=True`` is the overlapped-snapshot variant: the megabatch is
+    first staged into a snapshot-owned ``[B, P]`` buffer (one jitted stack,
+    which *copies* the leaves — so the sources may be mutated or donated by
+    the next train step the moment this returns), and that buffer is
+    **donated** into the encode, letting XLA recycle its memory into the
+    arena outputs instead of keeping both alive for the lifetime of the
+    snapshot slot.  Both variants produce byte-identical arenas."""
+    if staged:
+        rows = _stage_rows(tuple(leaves), bucket.ns, bucket.padded)
+        return _sz_encode_staged_jit(_donate_staging())(
+            rows, jnp.float32(eb), bucket.ns, bucket.padded)
     return _sz_compress_bucket(tuple(leaves), jnp.float32(eb), bucket.ns, bucket.padded)
 
 
@@ -278,6 +323,67 @@ def sz_decompress_bucket(a: SZArena, bucket: Bucket) -> list[jax.Array]:
     flats = _sz_decompress_bucket(a, a.ns, a.padded)
     return [f.reshape(s).astype(d) for f, s, d in
             zip(flats, bucket.shapes, bucket.dtypes)]
+
+
+# ------------------------------------------------- kernel (tile) buckets ----
+
+
+@jax.jit
+def _stage_rows_3d(leaves: tuple) -> jax.Array:
+    return jnp.stack([jnp.asarray(x).astype(jnp.float32) for x in leaves])
+
+
+def _szk_encode_staged(x: jax.Array, eb, interpret: bool) -> SZArena:
+    from repro.kernels import sz_fused as _szf  # lazy: core -> kernels only on use
+
+    absmax = jnp.max(jnp.abs(x), axis=(1, 2, 3))
+    # Per-row guarded bound from the row's own |x|max — identical to
+    # ``lorenzo3d.guarded_eb`` on the TILE-aligned (hence unpadded) field,
+    # so each row's stream matches ``ops.sz_compress_kernel`` bit for bit.
+    eb_i = sz_core.internal_bound(absmax, eb)
+    arena, widths, offsets, counts, total_bits, used = _szf.fused_compress_batched(
+        x, eb_i, interpret=interpret)
+    n = int(np.prod(x.shape[1:]))
+    return SZArena(arena, widths, offsets, counts, total_bits, eb_i, used,
+                   (n,) * x.shape[0], n)
+
+
+@lru_cache(maxsize=None)
+def _szk_encode_staged_jit(donate: bool):
+    return jax.jit(_szk_encode_staged, static_argnames=("interpret",),
+                   donate_argnums=(0,) if donate else ())
+
+
+def szk_compress_bucket(leaves: Sequence[jax.Array], bucket: Bucket, eb, *,
+                        interpret: Optional[bool] = None) -> SZArena:
+    """One batched fused-kernel launch for a shape-uniform bucket of 3-D
+    TILE-aligned leaves (``kernels.sz_fused.fused_compress_batched``):
+    row ``b``'s arena slice is byte-identical to the tile-blocked stream of
+    ``kernels.ops.sz_compress_kernel(leaf_b, eb)``.
+
+    The stack into the ``[B, Z, Y, X]`` megabatch is itself the snapshot's
+    staging copy (sources may be mutated or donated the moment this
+    returns) and is donated into the encode, mirroring the staged flat
+    path."""
+    from repro.kernels import default_interpret
+
+    assert len(set(bucket.shapes)) == 1, "kernel buckets are shape-uniform"
+    x = _stage_rows_3d(tuple(leaves))
+    return _szk_encode_staged_jit(_donate_staging())(
+        x, jnp.float32(eb), default_interpret(interpret))
+
+
+def szk_decompress_bucket(a: SZArena, bucket: Bucket, *,
+                          interpret: Optional[bool] = None) -> list[jax.Array]:
+    """One batched launch: decode a kernel-bucket arena back to its 3-D
+    leaves (inverse of :func:`szk_compress_bucket`)."""
+    from repro.kernels import default_interpret
+    from repro.kernels import sz_fused as _szf
+
+    shape = tuple(bucket.shapes[0])
+    rows = _szf.fused_decompress_batched(a.arena, a.widths, shape, a.eb_i,
+                                         interpret=default_interpret(interpret))
+    return [rows[b].astype(d) for b, d in enumerate(bucket.dtypes)]
 
 
 # -------------------------------------------------------------- ZFP arena --
@@ -418,7 +524,8 @@ def payload_decode(payload: bytes) -> dict:
     return out
 
 
-def to_host(a: SZArena, bucket: Bucket, halo: bool = True) -> HostArena:
+def to_host(a: SZArena, bucket: Bucket, halo: bool = True,
+            codec: str = CODEC_SZ) -> HostArena:
     """Pull a (single-shard) device arena to host: **one** scalar readback
     (``used``) followed by **one** D2H copy of the live arena slice — the
     per-leaf path needed both per leaf."""
@@ -430,9 +537,88 @@ def to_host(a: SZArena, bucket: Bucket, halo: bool = True) -> HostArena:
         "counts": np.asarray(a.counts, np.int32),
         "total_bits": np.asarray(a.total_bits, np.int32),
     }
-    return HostArena(CODEC_SZ, bucket.names, bucket.shapes, bucket.dtypes,
+    return HostArena(codec, bucket.names, bucket.shapes, bucket.dtypes,
                      bucket.ns, a.padded, 1, halo,
                      [float(v) for v in np.asarray(a.eb_i)], [shard])
+
+
+class PendingHostArena:
+    """Deferred :class:`HostArena`: a thread-safe fetch-once handle.
+
+    The overlapped snapshot path hands these to the checkpoint manager's
+    drain thread instead of materialized host arenas, so the training
+    thread never blocks on the per-bucket ``used`` readback or the arena
+    D2H — ``result()`` performs them (exactly once, caching value or
+    error) on whichever thread first asks.  The handle keeps the device
+    arena alive until resolved; drop it after ``result()`` so the slot's
+    device memory can be recycled."""
+
+    def __init__(self, fetch: Callable[[], HostArena], names: tuple = ()):
+        self._fetch = fetch
+        self.names = tuple(names)  # leaf names, for accounting before fetch
+        self._lock = threading.Lock()
+        self._result: Optional[HostArena] = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    def result(self) -> HostArena:
+        with self._lock:
+            if not self._done:
+                try:
+                    self._result = self._fetch()
+                except BaseException as e:  # cached: every caller sees it
+                    self._error = e
+                finally:
+                    self._fetch = None  # release the device-arena closure
+                    self._done = True
+            if self._error is not None:
+                raise self._error
+            return self._result
+
+
+def to_host_async(a: SZArena, bucket: Bucket, halo: bool = True,
+                  codec: str = CODEC_SZ) -> PendingHostArena:
+    """Non-blocking :func:`to_host`: enqueue D2H transfers of the sidecar
+    arrays (and the ``used`` scalar) behind the compression launch and
+    return a handle.  Nothing here waits on the device — the one readback
+    that *must* sync (``used``, which sizes the arena slice) happens inside
+    ``result()``, typically on the manager's drain thread several train
+    steps later, by which point the copies have long landed."""
+    for arr in (a.used, a.widths, a.offsets, a.counts, a.total_bits, a.eb_i):
+        arr.copy_to_host_async()
+    return PendingHostArena(lambda: to_host(a, bucket, halo, codec),
+                            names=bucket.names)
+
+
+class SnapshotSlots:
+    """Bounded pool of in-flight device snapshot buffers (default 2: one
+    draining, one filling).  ``acquire()`` blocks the snapshot hook — i.e.
+    the training thread — when every slot is occupied, which is the
+    backpressure that keeps device memory for snapshots at
+    O(slots x arena), not O(outstanding snapshots).  ``release()`` accepts
+    (and ignores) positional args so it can be passed directly as the
+    manager's ``on_complete`` callback."""
+
+    def __init__(self, slots: int = 2):
+        self.slots = int(slots)
+        self._sem = threading.BoundedSemaphore(self.slots)
+        self._lock = threading.Lock()
+        self._in_flight = 0
+
+    def acquire(self) -> None:
+        self._sem.acquire()
+        with self._lock:
+            self._in_flight += 1
+
+    def release(self, *_args) -> None:
+        with self._lock:
+            self._in_flight -= 1
+        self._sem.release()
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
 
 
 def leaf_stream(h: HostArena, b: int, shard: int = 0) -> dict:
@@ -484,6 +670,8 @@ def host_restore(meta: dict, payloads: list) -> dict:
         raise IOError(f"arena leaf has {len(payloads)} shard payloads, "
                       f"needs {grid}")
     shards = [payload_decode(p) for p in payloads]
+    if meta.get("codec") == CODEC_SZK:
+        return _host_restore_szk(info, shards)
     out = {}
     for b, name in enumerate(info["names"]):
         n = int(info["ns"][b])
@@ -507,6 +695,30 @@ def host_restore(meta: dict, payloads: list) -> dict:
         x = q.astype(np.float32) * np.float32(2.0 * info["eb_i"][b])
         shape = tuple(info["shapes"][b])
         out[name] = x[:n].reshape(shape).astype(np.dtype(info["dtypes"][b]))
+    return out
+
+
+def _host_restore_szk(info: dict, shards: list) -> dict:
+    """Kernel-bucket (``arena-szk``) restore: each row is the tile-major
+    stream of the 3-D tile coder, decoded through the kernel XLA fallback —
+    mesh-free, any backend, byte-compatible with the fused TPU path."""
+    from repro.kernels import ops as kops  # lazy: core -> kernels only on use
+
+    if int(info["grid"]) != 1:
+        raise IOError(f"arena-szk leaves are replicated-only; got grid={info['grid']}")
+    sh = shards[0]
+    out = {}
+    for b, name in enumerate(info["names"]):
+        n = int(info["ns"][b])
+        shape = tuple(info["shapes"][b])
+        nb = n // bitpack.BLOCK  # TILE-aligned rows have only full blocks
+        off, cnt = int(sh["offsets"][b]), int(sh["counts"][b])
+        packed = bitpack.from_storage(sh["arena"][off : off + cnt],
+                                      sh["widths"][b][:nb], n,
+                                      int(sh["total_bits"][b]))
+        x = kops.sz_decompress_kernel(packed, shape, shape,
+                                      np.float32(info["eb_i"][b]), path="xla")
+        out[name] = np.asarray(x).astype(np.dtype(info["dtypes"][b]))
     return out
 
 

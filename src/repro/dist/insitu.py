@@ -517,6 +517,48 @@ def plan_arena(entries: Sequence[tuple], mesh,
     return buckets, skipped
 
 
+def plan_kernel_buckets(entries: Sequence[tuple], mesh,
+                        elem_budget: int = arena_core.ROW_ELEM_BUDGET):
+    """Carve out the leaves the *fused tile kernel* should batch: 3-D,
+    TILE-aligned, replicated (no partitioned dim), small enough for the
+    kernel's int32 bit offsets.  Returns ``(buckets, rest)`` — shape-uniform
+    :class:`repro.core.arena.Bucket` groups (``padded == n``: tile rows
+    carry no pad) for :func:`repro.core.arena.szk_compress_bucket`, plus
+    the remaining entries to feed :func:`plan_arena`.  These leaves would
+    be flat-arena-eligible too, but the tile-blocked coder is the field
+    path of the paper (and of ``kernels.ops``), so it wins the route."""
+    from repro.kernels import lorenzo3d as _lor  # lazy: TILE only
+
+    tz, ty, tx = _lor.TILE
+    groups: dict[tuple, list] = {}
+    rest = []
+    for name, shape, dtype, spec in entries:
+        shape_t = tuple(int(s) for s in shape)
+        n = int(np.prod(shape_t)) if shape_t else 1
+        ok = (len(shape_t) == 3 and n * 32 < 2**31
+              and shape_t[0] % tz == 0 and shape_t[1] % ty == 0
+              and shape_t[2] % tx == 0)
+        if ok:
+            try:
+                layout = partition_layout(shape_t, spec, mesh)
+            except (NotImplementedError, ValueError):
+                layout = None
+            ok = layout is not None and all(a is None for a in layout)
+        if not ok:
+            rest.append((name, shape, dtype, spec))
+            continue
+        groups.setdefault(shape_t, []).append(
+            (str(name), shape_t, str(np.dtype(dtype)), n))
+    buckets = []
+    for shape_t in sorted(groups):
+        n = int(np.prod(shape_t))
+        for sub in arena_core.split_budget(groups[shape_t], n, elem_budget):
+            buckets.append(arena_core.Bucket(
+                n, tuple(e[0] for e in sub), tuple(e[1] for e in sub),
+                tuple(e[2] for e in sub), tuple(e[3] for e in sub)))
+    return buckets, rest
+
+
 def sharded_compress_arena(leaves: Sequence[jax.Array], bucket: ArenaBucket,
                            mesh, eb, halo: bool = True) -> ShardedSZArena:
     """Compress a bucket of flat-contiguously-sharded leaves into per-shard
@@ -619,6 +661,19 @@ def arena_to_host(stream: ShardedSZArena) -> arena_core.HostArena:
         arena_core.CODEC_SZ, stream.names, stream.shapes, stream.dtypes,
         stream.ns, stream.padded_loc * stream.grid, stream.grid, stream.halo,
         [float(v) for v in np.asarray(stream.eb_i)], shards)
+
+
+def arena_to_host_async(stream: ShardedSZArena) -> arena_core.PendingHostArena:
+    """Non-blocking :func:`arena_to_host`: enqueue D2H transfers of the
+    descriptor sidecars behind the bucket launch and return a
+    :class:`repro.core.arena.PendingHostArena` whose ``result()`` performs
+    the one ``used``-vector readback + slab copy — on the manager's drain
+    thread, not the training thread."""
+    for arr in (stream.used, stream.widths, stream.offsets, stream.counts,
+                stream.total_bits, stream.eb_i):
+        arr.copy_to_host_async()
+    return arena_core.PendingHostArena(lambda: arena_to_host(stream),
+                                       names=stream.names)
 
 
 # ------------------------------------------------------------ host side ----

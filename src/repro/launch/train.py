@@ -40,28 +40,46 @@ def _leaf_entries(state, min_bytes: int):
 
 
 def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
-                      arena: bool = True):
+                      arena: bool = True, overlap: bool = True, slots: int = 2):
     """Snapshot hook for ``loop_lib.LoopConfig.snapshot_hook``: compress
     every float leaf >= ``min_bytes`` shard-locally (halo-exchanged TPU-SZ)
     and persist the streams through the checkpoint manager.  The raw leaves
     never gather to host — only compressed bytes cross the PCIe/DCN
     boundary, the paper's in-situ snapshot story applied to training state.
 
-    ``arena=True`` (default) is the **arena-batched** path: leaves flatten
-    and size-bucket into megabatches (``dist.insitu.plan_arena``) and the
-    hook compiles **one function per bucket signature, not per leaf** — a
-    snapshot issues O(#buckets) launches, one halo permute and one pmax per
-    bucket, and one ``used`` readback + one D2H copy per bucket arena; the
-    manager writes one ``arena_iNNNNN_sNNN.bin`` per (bucket, shard).
+    ``arena=True`` (default) is the **arena-batched** path: 3-D
+    TILE-aligned replicated leaves batch through the fused tile kernel
+    (``dist.insitu.plan_kernel_buckets`` -> ``arena.szk_compress_bucket``,
+    codec ``arena-szk``); everything else flattens and size-buckets into
+    megabatches (``dist.insitu.plan_arena``).  The hook compiles **one
+    function per bucket signature, not per leaf** — a snapshot issues
+    O(#buckets) launches, one halo permute and one pmax per flat bucket.
     Arena-ineligible leaves (non-leading-dim partitions) fall back to the
     legacy per-leaf path, logged once.  ``arena=False`` is that per-leaf
     path for every leaf — the PR-4 format, kept restorable and selectable
-    (``--insitu-per-leaf``)."""
+    (``--insitu-per-leaf``).
+
+    ``overlap=True`` (default) makes snapshots **zero-stall**: each bucket
+    compresses into a snapshot-owned (staged, donated) device buffer, the
+    hook hands *deferred* host fetches (``PendingHostArena``) to the
+    manager's background drain queue and returns immediately — the compress
+    launches, the D2H copies, the payload encode, and the disk writes all
+    hide behind the next train steps.  A two-slot pool
+    (``arena.SnapshotSlots``) bounds in-flight device buffers: the hook
+    only blocks when ``slots`` snapshots are still draining.  The persisted
+    bytes are identical to ``overlap=False`` (the PR-5 synchronous wall,
+    kept selectable via ``--insitu-sync``).  The returned hook exposes
+    ``hook.wait()`` (drain everything; the loop calls it on exit) and
+    ``hook.manager`` / ``hook.slots`` for tests and benchmarks."""
+    from repro.core import arena as arena_core
     from repro.dist import insitu
 
-    snap = CheckpointManager(out_dir, keep_last=2, async_save=False)
+    snap = CheckpointManager(out_dir, keep_last=2, async_save=overlap,
+                             max_in_flight=slots)
+    pool = arena_core.SnapshotSlots(slots) if (overlap and arena) else None
     compiled: dict = {}  # leaf key -> jitted per-leaf compress (or None)
-    cache: dict = {"sig": None, "buckets": [], "fns": [], "legacy": []}
+    cache: dict = {"sig": None, "kbuckets": [], "buckets": [], "fns": [],
+                   "legacy": []}
 
     def _spec(leaf):
         return getattr(getattr(leaf, "sharding", None), "spec", None)
@@ -91,7 +109,8 @@ def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
             spec = _spec(leaf)
             entries.append((key, leaf.shape, leaf.dtype,
                             spec if spec is not None else jax.sharding.PartitionSpec()))
-        buckets, skipped = insitu.plan_arena(entries, mesh)
+        kbuckets, rest = insitu.plan_kernel_buckets(entries, mesh)
+        buckets, skipped = insitu.plan_arena(rest, mesh)
         for key, why in skipped:
             print(f"  in-situ snapshot: {key} not arena-eligible ({why}); "
                   "using the per-leaf path")
@@ -99,35 +118,74 @@ def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
         # later snapshot of the same state tree
         fns = [jax.jit(lambda *ls, _b=b: insitu.sharded_compress_arena(
             list(ls), _b, mesh, eb)) for b in buckets]
-        cache.update(buckets=buckets, fns=fns, legacy=[k for k, _ in skipped])
+        cache.update(kbuckets=kbuckets, buckets=buckets, fns=fns,
+                     legacy=[k for k, _ in skipped])
 
     def hook(step: int, state) -> None:
         named = _leaf_entries(state, min_bytes)
         fields = {}
-        if arena:
-            sig = tuple((k, tuple(l.shape), str(l.dtype)) for k, l in named)
-            if cache["sig"] != sig:
-                _replan(named)
-                cache["sig"] = sig
-            by_key = dict(named)
-            for k, (b, fn) in enumerate(zip(cache["buckets"], cache["fns"])):
-                fields[f"arena{k:03d}"] = insitu.arena_to_host(
-                    fn(*[by_key[nm] for nm in b.names]))
-            for key in cache["legacy"]:
-                _legacy_compress(key, by_key[key], fields)
-        else:
-            for key, leaf in named:
-                _legacy_compress(key, leaf, fields)
-        if fields:
+        acquired = False
+        try:
+            if arena:
+                sig = tuple((k, tuple(l.shape), str(l.dtype)) for k, l in named)
+                if cache["sig"] != sig:
+                    _replan(named)
+                    cache["sig"] = sig
+                by_key = dict(named)
+                if pool is not None:
+                    pool.acquire()  # backpressure: <= `slots` arenas on device
+                    acquired = True
+                for k, b in enumerate(cache["kbuckets"]):
+                    a = arena_core.szk_compress_bucket(
+                        [by_key[nm] for nm in b.names], b, eb)
+                    fields[f"karena{k:03d}"] = (
+                        arena_core.to_host_async(a, b, codec=arena_core.CODEC_SZK)
+                        if overlap else
+                        arena_core.to_host(a, b, codec=arena_core.CODEC_SZK))
+                for k, (b, fn) in enumerate(zip(cache["buckets"], cache["fns"])):
+                    stream = fn(*[by_key[nm] for nm in b.names])
+                    fields[f"arena{k:03d}"] = (
+                        insitu.arena_to_host_async(stream) if overlap
+                        else insitu.arena_to_host(stream))
+                for key in cache["legacy"]:
+                    _legacy_compress(key, by_key[key], fields)
+            else:
+                for key, leaf in named:
+                    _legacy_compress(key, leaf, fields)
+            if not fields:
+                if acquired:
+                    pool.release()
+                return
             n_leaves = sum(len(v.names) if hasattr(v, "names") else 1
                            for v in fields.values())
-            snap.save(step, fields, extra={"eb": eb, "n_fields": n_leaves,
-                                           "arena": bool(arena)})
-            res = snap.wait()
-            print(f"  in-situ snapshot step {step}: {n_leaves} fields in "
-                  f"{len(fields)} payload groups, "
-                  f"{res.ratio:.2f}x on-device compression")
+            extra = {"eb": eb, "n_fields": n_leaves, "arena": bool(arena)}
+            if overlap:
+                release = pool.release if acquired else (lambda *_: None)
 
+                def _done(s, _n=n_leaves, _g=len(fields), _rel=release):
+                    _rel(s)  # slot recycles only after the drain finished
+                    res = snap.last_result
+                    ratio = (f", {res.ratio:.2f}x on-device compression"
+                             if res is not None and res.step == s else "")
+                    print(f"  in-situ snapshot step {s}: {_n} fields in "
+                          f"{_g} payload groups drained in background{ratio}")
+
+                snap.save(step, fields, extra=extra, on_complete=_done)
+                acquired = False  # the drain queue now owns the release
+            else:
+                snap.save(step, fields, extra=extra)
+                res = snap.wait()
+                print(f"  in-situ snapshot step {step}: {n_leaves} fields in "
+                      f"{len(fields)} payload groups, "
+                      f"{res.ratio:.2f}x on-device compression")
+        except BaseException:
+            if acquired:
+                pool.release()
+            raise
+
+    hook.wait = snap.wait
+    hook.manager = snap
+    hook.slots = pool
     return hook
 
 
@@ -153,6 +211,11 @@ def main(argv=None) -> int:
                     help="disable arena batching for --insitu-snapshot: one "
                          "launch + one stream file per leaf (the legacy "
                          "PR-4 format) instead of one per size bucket")
+    ap.add_argument("--insitu-sync", action="store_true",
+                    help="disable snapshot overlap for --insitu-snapshot: "
+                         "block the loop for the full compress + D2H + "
+                         "disk-write wall at every snapshot (the PR-5 "
+                         "behavior) instead of draining in the background")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -194,7 +257,8 @@ def main(argv=None) -> int:
         policy = CodecPolicy(mode="sz_pwrel", eb=1e-4) if args.lossy_ckpt else CodecPolicy()
         ckpt = CheckpointManager(args.ckpt_dir, policy=policy)
         hook = (build_insitu_hook(mesh, f"{args.ckpt_dir}/fields", args.insitu_eb,
-                                  arena=not args.insitu_per_leaf)
+                                  arena=not args.insitu_per_leaf,
+                                  overlap=not args.insitu_sync)
                 if args.insitu_snapshot else None)
 
         def put(b):

@@ -51,11 +51,16 @@ class LoopResult:
     stragglers: list
     preempted: bool
     nan_abort: bool
-    # wall-clock of each snapshot_hook call — the number the arena-batched
-    # snapshot path (dist.insitu.plan_arena + one launch per bucket) is
-    # accountable to; benchmarks/throughput.py::snapshot_dispatch tracks the
-    # same quantity outside the loop
+    # wall-clock of each snapshot_hook call — for an overlapped hook
+    # (launch.train.build_insitu_hook(overlap=True)) this is only the
+    # *dispatch* cost: the compress + D2H + disk drain hide behind later
+    # steps, so the accountable number is the step-time blip, not this
     snapshot_s: list = dataclasses.field(default_factory=list)
+    # wall-clock of every train step (loss readback included): step_s at a
+    # snapshot boundary minus the steady-state p50 IS the snapshot's
+    # step-time blip — the quantity benchmarks/throughput.py's
+    # snapshot_overlap section reports at cadence 1/10/100
+    step_s: list = dataclasses.field(default_factory=list)
 
 
 def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
@@ -81,6 +86,7 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
     losses: list[float] = []
     stragglers: list[int] = []
     snapshot_s: list[float] = []
+    step_s: list[float] = []
     nan_abort = False
     step = start_step
     hb = Path(cfg.heartbeat_path) if cfg.heartbeat_path else None
@@ -101,6 +107,7 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
             state, metrics = train_step(state, batch)
             loss = float(jax.block_until_ready(metrics["loss"]))
             dt = time.time() - t0
+            step_s.append(dt)
             if not np.isfinite(loss):
                 nan_abort = True
                 if cfg.abort_on_nan:
@@ -126,8 +133,13 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
                 break
     finally:
         ckpt.wait()
+        if cfg.snapshot_hook is not None and hasattr(cfg.snapshot_hook, "wait"):
+            # overlapped hooks drain in the background; the loop must not
+            # exit with snapshots still in flight (their device slots and
+            # disk writes would die with the process)
+            cfg.snapshot_hook.wait()
         signal.signal(signal.SIGTERM, old_term)
         signal.signal(signal.SIGINT, old_int)
 
     return state, LoopResult(step, losses, stragglers, preempted["flag"],
-                             nan_abort, snapshot_s)
+                             nan_abort, snapshot_s, step_s)

@@ -410,3 +410,97 @@ class TestManagerArenaFormat:
         blob.write_bytes(bytes(raw))
         with pytest.raises(IOError):
             mgr.restore(state_like={k: 0 for k in state})
+
+
+# --------------------------------------------------- kernel-route buckets --
+
+
+class TestKernelBuckets:
+    """3-D TILE-aligned replicated leaves route through the fused tile
+    kernel (codec ``arena-szk``) instead of the flat per-row Lorenzo."""
+
+    def test_plan_kernel_buckets_eligibility(self):
+        from repro.dist import insitu
+
+        mesh = jax.sharding.AbstractMesh((2,), ("data",))
+        entries = [
+            ("tile_a", (8, 64, 128), np.float32, PS()),     # kernel route
+            ("tile_b", (8, 64, 128), np.float32, PS()),     # same bucket
+            ("misaligned", (8, 64, 127), np.float32, PS()),  # flat route
+            ("flat2d", (64, 64), np.float32, PS()),          # flat route
+            ("sharded", (8, 64, 128), np.float32, PS("data")),  # flat route
+        ]
+        kbuckets, rest = insitu.plan_kernel_buckets(entries, mesh)
+        assert len(kbuckets) == 1
+        assert kbuckets[0].names == ("tile_a", "tile_b")
+        assert kbuckets[0].padded == 8 * 64 * 128  # tile rows carry no pad
+        assert [e[0] for e in rest] == ["misaligned", "flat2d", "sharded"]
+
+    def test_szk_byte_identity_vs_tile_kernel(self):
+        from repro.kernels import ops as kops
+
+        rng = np.random.default_rng(7)
+        eb = 1e-3
+        leaves = [jnp.asarray((rng.normal(size=(8, 64, 128)) * (i + 1))
+                              .astype(np.float32)) for i in range(3)]
+        n = 8 * 64 * 128
+        b = arena.Bucket(n, ("x0", "x1", "x2"),
+                         ((8, 64, 128),) * 3, ("float32",) * 3, (n,) * 3)
+        a = arena.szk_compress_bucket(leaves, b, eb)
+        h = arena.to_host(a, b, codec=arena.CODEC_SZK)
+        assert h.codec == arena.CODEC_SZK
+        sh = h.shards[0]
+        dec = arena.szk_decompress_bucket(a, b)
+        for i, x in enumerate(leaves):
+            # the arena row must be bit-for-bit the standalone tile coder
+            packed, pshape, eb_i = kops.sz_compress_kernel(x, eb, path="xla")
+            ref = bitpack.to_storage(packed)
+            off, cnt = int(sh["offsets"][i]), int(sh["counts"][i])
+            assert cnt == len(ref["words"])
+            np.testing.assert_array_equal(sh["arena"][off:off + cnt],
+                                          ref["words"])
+            np.testing.assert_array_equal(sh["widths"][i], ref["widths"])
+            # device-side batched decode matches too
+            np.testing.assert_array_equal(
+                np.asarray(dec[i]),
+                np.asarray(kops.sz_decompress_kernel(
+                    packed, pshape, (8, 64, 128), eb_i, path="xla")))
+
+    def test_szk_manager_roundtrip(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+
+        rng = np.random.default_rng(8)
+        eb = 1e-3
+        raw = {f"f{i}": (rng.normal(size=(8, 64, 128)) * 5).astype(np.float32)
+               for i in range(2)}
+        n = 8 * 64 * 128
+        b = arena.Bucket(n, tuple(raw), ((8, 64, 128),) * 2,
+                         ("float32",) * 2, (n,) * 2)
+        a = arena.szk_compress_bucket([jnp.asarray(v) for v in raw.values()],
+                                      b, eb)
+        state = {"karena000": arena.to_host(a, b, codec=arena.CODEC_SZK)}
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        mgr.save(1, state)
+        out, _ = mgr.restore(state_like={"karena000": 0})
+        got = out["karena000"]
+        for k, v in raw.items():
+            assert got[k].shape == v.shape and got[k].dtype == np.float32
+            assert np.abs(got[k] - v).max() <= eb * (1 + 1e-5)
+
+    def test_staged_flat_encode_matches_unstaged(self):
+        rng = np.random.default_rng(9)
+        named = [("a", rng.normal(size=(48, 32)).astype(np.float32)),
+                 ("b", rng.normal(size=(96,)).astype(np.float32))]
+        plan = arena.plan_for_tree(dict(named))
+        for b in plan:
+            leaves = [jnp.asarray(dict(named)[nm.strip("['']")])
+                      for nm in b.names]
+            a0 = arena.sz_compress_bucket(leaves, b, 1e-3)
+            a1 = arena.sz_compress_bucket(leaves, b, 1e-3, staged=True)
+            np.testing.assert_array_equal(
+                np.asarray(a0.arena)[:int(a0.used)],
+                np.asarray(a1.arena)[:int(a1.used)])
+            np.testing.assert_array_equal(np.asarray(a0.widths),
+                                          np.asarray(a1.widths))
+            np.testing.assert_array_equal(np.asarray(a0.eb_i),
+                                          np.asarray(a1.eb_i))

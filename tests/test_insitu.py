@@ -357,6 +357,7 @@ class TestSnapshotHook:
         w2 = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)) * 3
         state = {"params": {"w": w, "w2": w2}, "opt": {"step": jnp.int32(1)}}
         hook(5, state)
+        hook.wait()  # overlap is the default: drain before inspecting disk
         d = tmp_path / "step_000000005"
         assert (d / "MANIFEST.json").exists()
         # one arena file for the whole bucket, no per-leaf files
@@ -378,6 +379,7 @@ class TestSnapshotHook:
         w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32))
         state = {"params": {"w": w}, "opt": {"step": jnp.int32(1)}}
         hook(5, state)
+        hook.wait()
         d = tmp_path / "step_000000005"
         assert list(d.glob("leaf_*_s000.bin"))  # the PR-4 per-leaf layout
         from repro.checkpoint.manager import CheckpointManager
@@ -397,6 +399,7 @@ class TestSnapshotHook:
         state = {"big": big, "ok": jnp.ones((64, 64), jnp.float32)}
         hook(1, state)
         hook(2, state)
+        hook.wait()
         out = capsys.readouterr().out
         assert out.count("skipping ['big']") == 1  # logged once, then cached
         assert (tmp_path / "step_000000002" / "MANIFEST.json").exists()  # ok leaf saved

@@ -1,0 +1,336 @@
+"""Zero-stall snapshot machinery: drain-thread error surfacing, bounded
+backpressure, kill-safe atomic finalization, slot-pool semantics, deferred
+host fetches, and overlap-vs-sync byte identity of the persisted bytes."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as manager_mod
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import arena
+
+
+def _state():
+    return {"w": jnp.arange(4096, dtype=jnp.float32),
+            "step": jnp.int32(1)}
+
+
+# ------------------------------------------------------- error surfacing --
+
+
+def test_drain_error_reraised_on_wait(tmp_path, monkeypatch):
+    """A disk failure on the drain thread must not vanish: the next
+    ``wait()`` re-raises it, and the manager recovers for later saves."""
+    broken = {"on": True}
+    orig = manager_mod._write_bytes
+
+    def flaky(path, data):
+        if broken["on"]:
+            raise IOError("disk full")
+        orig(path, data)
+
+    monkeypatch.setattr(manager_mod, "_write_bytes", flaky)
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    s = _state()
+    mgr.save(1, s)
+    with pytest.raises(IOError, match="disk full"):
+        mgr.wait()
+    # the failed step never became adoptable, and no tmp dir shadows a retry
+    assert mgr.latest_step() is None
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    broken["on"] = False
+    mgr.save(1, s)
+    res = mgr.wait()
+    assert res is not None and res.step == 1
+    out, _ = mgr.restore(state_like=s)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(s["w"]))
+
+
+def test_drain_error_reraised_on_next_save(tmp_path, monkeypatch):
+    broken = {"on": True}
+    orig = manager_mod._write_bytes
+
+    def flaky(path, data):
+        if broken["on"]:
+            raise IOError("injected write failure")
+        orig(path, data)
+
+    monkeypatch.setattr(manager_mod, "_write_bytes", flaky)
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    s = _state()
+    mgr.save(1, s)
+    mgr._queue.join()  # drain without wait() (which would raise here)
+    broken["on"] = False
+    with pytest.raises(IOError, match="injected write failure"):
+        mgr.save(2, s)
+    # the error was consumed by the raise; the manager keeps working
+    mgr.save(2, s)
+    assert mgr.wait().step == 2
+
+
+def test_on_complete_fires_even_on_failure(tmp_path, monkeypatch):
+    monkeypatch.setattr(manager_mod, "_write_bytes",
+                        lambda path, data: (_ for _ in ()).throw(IOError("x")))
+    done = []
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(3, _state(), on_complete=done.append)
+    with pytest.raises(IOError):
+        mgr.wait()
+    assert done == [3]  # the slot must recycle even when the write fails
+
+
+# ---------------------------------------------------------- backpressure --
+
+
+def test_bounded_queue_backpressure(tmp_path, monkeypatch):
+    """``save()`` blocks only once ``max_in_flight`` snapshots are already
+    queued behind the one draining — training never runs unboundedly ahead
+    of the disk."""
+    gate = threading.Event()
+    orig = manager_mod._write_bytes
+
+    def gated(path, data):
+        gate.wait(timeout=30)
+        orig(path, data)
+
+    monkeypatch.setattr(manager_mod, "_write_bytes", gated)
+    mgr = CheckpointManager(tmp_path, keep_last=5, async_save=True,
+                            max_in_flight=1)
+    s = _state()
+    mgr.save(1, s)  # picked up by the worker, parked on the gate
+    mgr.save(2, s)  # fills the queue (maxsize=1)
+    third_done = threading.Event()
+
+    def third():
+        mgr.save(3, s)
+        third_done.set()
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    assert not third_done.wait(timeout=0.3)  # backpressure: save 3 blocks
+    gate.set()
+    assert third_done.wait(timeout=30)
+    t.join(timeout=30)
+    assert mgr.wait().step == 3
+    assert sorted(p.name for p in tmp_path.glob("step_*")) == [
+        "step_000000001", "step_000000002", "step_000000003"]
+
+
+# ------------------------------------------------- kill-safe atomic write --
+
+
+_KILL = """
+    import os, signal
+    import jax.numpy as jnp
+    from repro.checkpoint import manager as m
+    from repro.checkpoint.manager import CheckpointManager
+
+    s = {"w": jnp.arange(4096, dtype=jnp.float32), "step": jnp.int32(1)}
+    mgr = CheckpointManager("CKPTDIR", async_save=False)
+    mgr.save(1, s)
+
+    orig = m._write_bytes
+    def killing(path, data):
+        if path.name.endswith("KILLAT"):
+            os.kill(os.getpid(), signal.SIGKILL)  # crash mid-finalization
+        orig(path, data)
+    m._write_bytes = killing
+    mgr.save(2, s)
+"""
+
+
+@pytest.mark.parametrize("kill_at", ["leaf_00000.bin", "MANIFEST.json"])
+def test_kill_mid_write_never_partial(tmp_path, kill_at):
+    """SIGKILL during step 2's write — before a payload, or after every
+    payload but before the manifest — must leave step 1 fully restorable
+    and step 2 invisible (the manifest-last + rename-last protocol)."""
+    script = tmp_path / "sub.py"
+    script.write_text(textwrap.dedent(_KILL)
+                      .replace("CKPTDIR", str(tmp_path / "ckpt"))
+                      .replace("KILLAT", kill_at))
+    env = dict(os.environ,
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == -9, r.stdout + r.stderr
+
+    ckpt = tmp_path / "ckpt"
+    assert sorted(p.name for p in ckpt.glob("step_*")) == ["step_000000001"]
+    tmp_dirs = list(ckpt.glob(".tmp_step_*"))
+    for d in tmp_dirs:  # the orphaned tmp dir never looks adoptable
+        assert not (d / "MANIFEST.json").exists()
+    mgr = CheckpointManager(ckpt, async_save=False)
+    assert mgr.latest_step() == 1
+    s = {"w": jnp.arange(4096, dtype=jnp.float32), "step": jnp.int32(1)}
+    out, _ = mgr.restore(state_like=s)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(s["w"]))
+
+
+# ------------------------------------------------------------ slot pool --
+
+
+def test_snapshot_slots_block_and_release():
+    pool = arena.SnapshotSlots(2)
+    pool.acquire()
+    pool.acquire()
+    assert pool.in_flight == 2
+    got = threading.Event()
+
+    def third():
+        pool.acquire()
+        got.set()
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    assert not got.wait(timeout=0.2)  # both slots busy: hook would stall here
+    pool.release("ignored", "positional", "args")  # usable as on_complete
+    assert got.wait(timeout=10)
+    t.join(timeout=10)
+    assert pool.in_flight == 2
+    pool.release()
+    pool.release()
+    assert pool.in_flight == 0
+    with pytest.raises(ValueError):
+        pool.release()  # over-release is a bug, not a no-op
+
+
+def test_pending_host_arena_fetch_once():
+    calls = []
+
+    def fetch():
+        calls.append(1)
+        return "host-arena"
+
+    p = arena.PendingHostArena(fetch, names=("a", "b"))
+    assert p.names == ("a", "b")
+    assert p.result() == "host-arena"
+    assert p.result() == "host-arena"
+    assert len(calls) == 1  # fetch-once: the D2H must not repeat
+
+
+def test_pending_host_arena_error_cached():
+    def fetch():
+        raise RuntimeError("device gone")
+
+    p = arena.PendingHostArena(fetch)
+    for _ in range(2):  # every caller sees the same failure
+        with pytest.raises(RuntimeError, match="device gone"):
+            p.result()
+
+
+# ------------------------------------- overlap-vs-sync byte identity -----
+
+
+def _mixed_state(rng):
+    # one TILE-aligned 3-D field (kernel bucket), two flat leaves (flat
+    # arena bucket): both production compress routes in one snapshot
+    return {
+        "field": jnp.asarray((rng.normal(size=(8, 64, 128)) * 3)
+                             .astype(np.float32)),
+        "proj_a": jnp.asarray(rng.normal(size=(96, 1024)).astype(np.float32)),
+        "proj_b": jnp.asarray(rng.normal(size=(64, 1024)).astype(np.float32)),
+    }
+
+
+def _run_hook(out_dir, state, overlap):
+    from repro.launch.train import build_insitu_hook
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    hook = build_insitu_hook(mesh, out_dir, 1e-3, min_bytes=1 << 16,
+                             overlap=overlap)
+    hook(1, state)
+    hook.wait()
+    return hook
+
+
+def test_overlap_sync_byte_identity(tmp_path, capsys):
+    """The zero-stall path must change *when* work happens, never *what* is
+    persisted: every payload byte and manifest leaf entry matches the
+    synchronous PR-5 wall."""
+    rng = np.random.default_rng(42)
+    vals = {k: np.asarray(v) for k, v in _mixed_state(rng).items()}
+    _run_hook(tmp_path / "sync", {k: jnp.asarray(v) for k, v in vals.items()},
+              overlap=False)
+    _run_hook(tmp_path / "over", {k: jnp.asarray(v) for k, v in vals.items()},
+              overlap=True)
+
+    d_sync = sorted((tmp_path / "sync").glob("step_*"))[0]
+    d_over = sorted((tmp_path / "over").glob("step_*"))[0]
+    names = sorted(p.name for p in d_sync.iterdir())
+    assert names == sorted(p.name for p in d_over.iterdir())
+    bins = [n for n in names if n.endswith(".bin")]
+    assert any(n.startswith("arena_") for n in bins)
+    for n in bins:
+        assert (d_sync / n).read_bytes() == (d_over / n).read_bytes(), n
+    ms = json.loads((d_sync / "MANIFEST.json").read_text())
+    mo = json.loads((d_over / "MANIFEST.json").read_text())
+    assert ms["leaves"] == mo["leaves"]
+    assert ms["digest"] == mo["digest"]
+    # both codecs actually present: the kernel-bucket route and the flat one
+    codecs = {m.get("codec") for m in ms["leaves"]}
+    assert arena.CODEC_SZK in codecs and arena.CODEC_SZ in codecs, codecs
+
+
+def test_overlap_source_buffers_may_die_after_dispatch(tmp_path, capsys):
+    """Satellite 4: right after the overlapped hook returns, the train step
+    may donate/overwrite (here: delete — the strongest form) every source
+    leaf.  The drained snapshot must still hold the pre-mutation bytes,
+    because the hook staged them into snapshot-owned buffers."""
+    rng = np.random.default_rng(42)
+    vals = {k: np.asarray(v) for k, v in _mixed_state(rng).items()}
+    _run_hook(tmp_path / "ref", {k: jnp.asarray(v) for k, v in vals.items()},
+              overlap=False)
+
+    from repro.launch.train import build_insitu_hook
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    hook = build_insitu_hook(mesh, tmp_path / "over", 1e-3,
+                             min_bytes=1 << 16, overlap=True)
+    state = {k: jnp.asarray(v) for k, v in vals.items()}
+    hook(1, state)
+    for v in state.values():
+        v.delete()  # the next donating train step, in effigy
+    hook.wait()
+
+    d_ref = sorted((tmp_path / "ref").glob("step_*"))[0]
+    d_over = sorted((tmp_path / "over").glob("step_*"))[0]
+    for p in sorted(d_ref.glob("*.bin")):
+        assert p.read_bytes() == (d_over / p.name).read_bytes(), p.name
+
+
+def test_overlap_hook_returns_before_drain(tmp_path, capsys, monkeypatch):
+    """The hook call must not ride the disk: park the drain thread on a
+    gate and confirm the hook returns (and the loop could keep stepping)
+    while the snapshot is still in flight."""
+    gate = threading.Event()
+    orig = manager_mod._write_bytes
+
+    def gated(path, data):
+        gate.wait(timeout=30)
+        orig(path, data)
+
+    monkeypatch.setattr(manager_mod, "_write_bytes", gated)
+    rng = np.random.default_rng(0)
+    from repro.launch.train import build_insitu_hook
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    hook = build_insitu_hook(mesh, tmp_path, 1e-3, min_bytes=1 << 16,
+                             overlap=True)
+    hook(1, _mixed_state(rng))
+    assert hook.slots.in_flight == 1  # dispatched, draining in background
+    assert not list(Path(tmp_path).glob("step_*"))
+    gate.set()
+    hook.wait()
+    assert hook.slots.in_flight == 0  # drain completion recycled the slot
+    assert list(Path(tmp_path).glob("step_*"))

@@ -116,6 +116,35 @@ class TestLoop:
         loop_lib.run(step_fn, state, pipe, ckpt, cfg)
         assert json.loads(hb.read_text())["step"] == 1
 
+    def test_step_times_recorded(self, tmp_path):
+        """Every step's wall-clock lands in ``LoopResult.step_s`` — the
+        series the snapshot_overlap benchmark derives blips from."""
+        _, state, pipe, step_fn, ckpt = _tiny_setup(tmp_path)
+        cfg = loop_lib.LoopConfig(total_steps=4, ckpt_every=2)
+        _, res = loop_lib.run(step_fn, state, pipe, ckpt, cfg)
+        assert len(res.step_s) == 4
+        assert all(t > 0 for t in res.step_s)
+
+    def test_overlapped_hook_drained_at_exit(self, tmp_path, capsys):
+        """The loop must call ``hook.wait()`` on exit so no snapshot is
+        still in flight when the process dies — and the persisted in-situ
+        snapshots restore to bound."""
+        from repro.launch.train import build_insitu_hook
+
+        _, state, pipe, step_fn, ckpt = _tiny_setup(tmp_path)
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1),
+                                 ("data",))
+        hook = build_insitu_hook(mesh, tmp_path / "insitu", 1e-3,
+                                 min_bytes=1 << 10, overlap=True)
+        cfg = loop_lib.LoopConfig(total_steps=4, ckpt_every=2,
+                                  snapshot_hook=hook)
+        _, res = loop_lib.run(step_fn, state, pipe, ckpt, cfg)
+        assert res.final_step == 4
+        assert len(res.snapshot_s) == 2  # steps 2 and 4
+        assert hook.slots is None or hook.slots.in_flight == 0
+        steps = sorted((tmp_path / "insitu").glob("step_*"))
+        assert [int(p.name.split("_")[1]) for p in steps] == [2, 4]
+
 
 class TestGradCompressionMath:
     def test_quantize_bounds(self):
