@@ -61,6 +61,7 @@ import queue
 import shutil
 import sys
 import threading
+import time
 import zlib
 from pathlib import Path
 from typing import Any, Callable, Optional
@@ -72,6 +73,19 @@ try:
     import zstandard as _zstd
 except Exception:  # pragma: no cover
     _zstd = None
+
+
+class SnapshotCorruptionError(IOError):
+    """A snapshot failed verification (manifest digest, per-payload CRC, or
+    payload decode).  Names the offending payload so operators — and the
+    supervisor's fallback — know exactly which bytes went bad.  Subclasses
+    ``IOError`` so pre-existing ``except IOError`` callers keep working."""
+
+    def __init__(self, msg: str, *, step: Optional[int] = None,
+                 payload: Optional[str] = None):
+        super().__init__(msg)
+        self.step = step
+        self.payload = payload  # file name inside the step dir
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +103,10 @@ class SaveResult:
     path: Path
     nbytes_raw: int
     nbytes_stored: int
+    # transient-I/O retries the drain worker spent before this save landed
+    # (0 on a clean write) — visible so tests and fleet telemetry can tell
+    # "survived a flaky disk" from "never saw one"
+    retries: int = 0
 
     @property
     def ratio(self) -> float:
@@ -272,18 +290,38 @@ def _to_host(x: Any) -> Any:
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep_last: int = 3,
                  policy: CodecPolicy = CodecPolicy(), async_save: bool = True,
-                 max_in_flight: int = 2):
+                 max_in_flight: int = 2, io_retries: int = 3,
+                 retry_backoff_s: float = 0.05,
+                 write_bytes: Optional[Callable[[Path, bytes], None]] = None,
+                 fetch_hook: Optional[Callable[[int], None]] = None):
+        """``io_retries``: total write attempts the drain worker makes per
+        snapshot before poisoning itself with the error (transient
+        ``OSError``/``BlockingIOError`` only; backoff doubles from
+        ``retry_backoff_s``, capped at 1 s).  ``write_bytes``/``fetch_hook``
+        are injection points (fault drills, alternative filesystems): the
+        payload writer and a callable run on the drain thread right before
+        deferred host fetches resolve."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.policy = policy
         self.async_save = async_save
         self.max_in_flight = max(1, int(max_in_flight))
+        self.io_retries = max(1, int(io_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._write_hook = write_bytes
+        self._fetch_hook = fetch_hook
         self._queue: Optional[queue.Queue] = None
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._error_lock = threading.Lock()
         self._last_result: Optional[SaveResult] = None
+
+    def _wb(self, path: Path, data: bytes) -> None:
+        # default stays a late-bound module lookup so the kill-mid-write
+        # subprocess tests can still swap _write_bytes wholesale
+        (self._write_hook if self._write_hook is not None else _write_bytes)(
+            path, data)
 
     # ------------------------------------------------------------- save --
     def save(self, step: int, state: Any, extra: Optional[dict] = None,
@@ -306,7 +344,9 @@ class CheckpointManager:
             self._queue.put((step, host, treedef_str, extra or {}, on_complete))
         else:
             try:
-                self._write(step, host, treedef_str, extra or {})
+                # same bounded-backoff policy as the drain thread: a
+                # transient OSError must not kill a synchronous save either
+                self._write_with_retry(step, host, treedef_str, extra or {})
             finally:
                 if on_complete is not None:
                     on_complete(step)
@@ -323,7 +363,7 @@ class CheckpointManager:
         while True:
             step, host, treedef_str, extra, on_complete = self._queue.get()
             try:
-                self._write(step, host, treedef_str, extra)
+                self._write_with_retry(step, host, treedef_str, extra)
             except BaseException as e:
                 self._set_error(e)
             finally:
@@ -333,6 +373,24 @@ class CheckpointManager:
                 except BaseException as e:
                     self._set_error(e)
                 self._queue.task_done()
+
+    def _write_with_retry(self, step: int, host: list, treedef_str: str,
+                          extra: dict) -> None:
+        """Drain-thread write with bounded exponential backoff on transient
+        I/O errors.  ``BlockingIOError`` is an ``OSError`` subclass; a
+        :class:`SnapshotCorruptionError` is *not* transient and never
+        retried.  ``_write`` cleans its tmp dir on failure, so every
+        attempt starts from a blank slate."""
+        for attempt in range(self.io_retries):
+            try:
+                self._write(step, host, treedef_str, extra, retries=attempt)
+                return
+            except SnapshotCorruptionError:
+                raise
+            except OSError:
+                if attempt + 1 >= self.io_retries:
+                    raise
+                time.sleep(min(self.retry_backoff_s * (2 ** attempt), 1.0))
 
     def _set_error(self, e: BaseException) -> None:
         with self._error_lock:
@@ -345,11 +403,12 @@ class CheckpointManager:
         if err is not None:
             raise err
 
-    def _write(self, step: int, host: list, treedef_str: str, extra: dict) -> None:
+    def _write(self, step: int, host: list, treedef_str: str, extra: dict,
+               retries: int = 0) -> None:
         tmp = self.dir / f".tmp_step_{step:09d}"
         final = self.dir / f"step_{step:09d}"
         try:
-            self._write_into(tmp, final, step, host, treedef_str, extra)
+            self._write_into(tmp, final, step, host, treedef_str, extra, retries)
         except BaseException:
             # a partial tmp dir is invisible to restore (only step_* dirs
             # are scanned), but don't leave it to shadow a retried save
@@ -357,7 +416,7 @@ class CheckpointManager:
             raise
 
     def _write_into(self, tmp: Path, final: Path, step: int, host: list,
-                    treedef_str: str, extra: dict) -> None:
+                    treedef_str: str, extra: dict, retries: int = 0) -> None:
         tmp.mkdir(parents=True, exist_ok=True)
         manifest: dict[str, Any] = {"step": step, "treedef": treedef_str,
                                     "extra": extra, "leaves": []}
@@ -370,6 +429,8 @@ class CheckpointManager:
                 # deferred overlapped-snapshot fetch: the one `used` readback
                 # + arena D2H happen here, on the drain thread — the training
                 # thread never waited on them
+                if self._fetch_hook is not None:
+                    self._fetch_hook(step)
                 arr = arr.result()
             if arena is not None and isinstance(arr, arena.HostArena):
                 # arena-batched snapshot bucket: one binary per shard (the
@@ -386,7 +447,7 @@ class CheckpointManager:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
-                    _write_bytes(tmp / f"arena_{i:05d}_s{j:03d}.bin", payload)
+                    self._wb(tmp / f"arena_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
@@ -407,7 +468,7 @@ class CheckpointManager:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
-                    _write_bytes(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
+                    self._wb(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
@@ -420,29 +481,32 @@ class CheckpointManager:
                                         "dtype": str(arr.dtype), "shards": []}
                 for j, (idx, block) in enumerate(arr.shards):
                     payload, bmeta = _encode_leaf(block, self.policy)
-                    _write_bytes(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
+                    self._wb(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
                     bmeta["index"] = [list(se) for se in idx]
                     meta["shards"].append(bmeta)
                     raw += bmeta["raw_bytes"]
                     stored += bmeta["stored_bytes"]
             else:
                 payload, meta = _encode_leaf(arr, self.policy)
-                _write_bytes(tmp / f"leaf_{i:05d}.bin", payload)
+                self._wb(tmp / f"leaf_{i:05d}.bin", payload)
                 raw += meta["raw_bytes"]
                 stored += meta["stored_bytes"]
             manifest["leaves"].append(meta)
-        manifest["digest"] = _crc(json.dumps(manifest["leaves"]).encode())
+        # digest covers the whole manifest body (leaves, treedef, extra,
+        # step), not just the leaf index — a bit flip anywhere in the
+        # manifest is detected, not just inside a leaf entry
+        manifest["digest"] = _crc(json.dumps(manifest, sort_keys=True).encode())
         # manifest LAST, fsync'd, then the directory itself: after a crash,
         # either the manifest (and everything it indexes, already durable)
         # exists, or the snapshot is invisible — never a partial that
         # restore would adopt
-        _write_bytes(tmp / "MANIFEST.json", json.dumps(manifest, indent=1).encode())
+        self._wb(tmp / "MANIFEST.json", json.dumps(manifest, indent=1).encode())
         _fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic adoption
         _fsync_dir(self.dir)
-        self._last_result = SaveResult(step, final, raw, stored)
+        self._last_result = SaveResult(step, final, raw, stored, retries)
         self._gc()
 
     def wait(self) -> Optional[SaveResult]:
@@ -452,6 +516,39 @@ class CheckpointManager:
             self._queue.join()
         self._raise_pending()
         return self._last_result
+
+    def flush(self) -> None:
+        """Block until every queued snapshot is durably written *or*
+        failed, without consuming or re-raising a pending drain error
+        (unlike :meth:`wait`).  The fault injector uses this so "corrupt
+        the newest snapshot" names a deterministic victim even while the
+        drain is mid-write — the pending error (if any) still belongs to
+        whoever calls :meth:`wait`/:meth:`quiesce` next."""
+        if self._queue is not None:
+            self._queue.join()
+
+    def quiesce(self, timeout: float) -> tuple[bool, Optional[BaseException]]:
+        """Bounded-deadline :meth:`wait` for fault handling: wait up to
+        ``timeout`` seconds for the drain queue to empty, then return
+        ``(drained, error)`` instead of blocking forever or raising — a
+        supervisor deciding how to fail over must regain control even when
+        the drain worker is wedged.  Any pending drain error is *consumed*
+        (the caller owns it now); snapshots still queued at the deadline
+        keep draining in the background and remain adoptable when they
+        finish."""
+        drained = True
+        if self._queue is not None:
+            deadline = time.monotonic() + timeout
+            with self._queue.all_tasks_done:
+                while self._queue.unfinished_tasks:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        drained = False
+                        break
+                    self._queue.all_tasks_done.wait(remaining)
+        with self._error_lock:
+            err, self._error = self._error, None
+        return drained, err
 
     @property
     def last_result(self) -> Optional[SaveResult]:
@@ -469,66 +566,178 @@ class CheckpointManager:
         steps = sorted(self.dir.glob("step_*"))
         return int(steps[-1].name.split("_")[1]) if steps else None
 
+    def available_steps(self) -> list[int]:
+        """Restorable-looking steps, newest first (verification happens at
+        restore time — a listed step may still fail its CRCs)."""
+        return sorted((int(p.name.split("_")[1]) for p in
+                       self.dir.glob("step_*")), reverse=True)
+
+    def _quarantine(self, step: int) -> Path:
+        """Move a corrupt step dir into ``quarantine/`` — out of the
+        restore scan, but preserved for forensics (never deleted: the bytes
+        are the only evidence of *what* corrupted)."""
+        qdir = self.dir / "quarantine"
+        qdir.mkdir(exist_ok=True)
+        src = self.dir / f"step_{step:09d}"
+        dst = qdir / src.name
+        k = 0
+        while dst.exists():  # same step quarantined twice across restarts
+            k += 1
+            dst = qdir / f"{src.name}.{k}"
+        src.rename(dst)
+        return dst
+
+    def _read_payload(self, d: Path, name: str, bmeta: dict,
+                      step: int) -> bytes:
+        """Read + CRC-verify + (optionally) zstd-expand one payload file.
+        Every failure mode — missing file, checksum mismatch, truncated
+        zstd frame — surfaces as :class:`SnapshotCorruptionError` naming
+        the payload."""
+        try:
+            payload = (d / name).read_bytes()
+        except OSError as e:
+            raise SnapshotCorruptionError(
+                f"missing/unreadable payload {name} in {d}: {e}",
+                step=step, payload=name) from e
+        if _crc(payload) != bmeta["crc32"]:
+            raise SnapshotCorruptionError(
+                f"crc mismatch in payload {name} of {d} "
+                f"(stored {bmeta['crc32']:#010x}, got {_crc(payload):#010x})",
+                step=step, payload=name)
+        if bmeta.get("zstd"):
+            if _zstd is None:
+                raise IOError(f"payload {name} is zstd-compressed but "
+                              "zstandard is not installed on this host")
+            try:
+                payload = _zstd.ZstdDecompressor().decompress(payload)
+            except Exception as e:
+                raise SnapshotCorruptionError(
+                    f"zstd decode of payload {name} in {d} failed: {e}",
+                    step=step, payload=name) from e
+        return payload
+
+    def _load_manifest(self, d: Path, step: int) -> dict:
+        try:
+            manifest = json.loads((d / "MANIFEST.json").read_text())
+        except (OSError, ValueError, UnicodeDecodeError) as e:
+            raise SnapshotCorruptionError(
+                f"unreadable manifest in {d}: {e}", step=step,
+                payload="MANIFEST.json") from e
+        body = {k: v for k, v in manifest.items() if k != "digest"}
+        if manifest.get("digest") != _crc(
+                json.dumps(body, sort_keys=True).encode()):
+            raise SnapshotCorruptionError(
+                f"manifest digest mismatch in {d}", step=step,
+                payload="MANIFEST.json")
+        return manifest
+
     def restore(self, step: Optional[int] = None, state_like: Any = None,
-                shardings: Any = None) -> tuple[Any, dict]:
-        """Restore (state, extra). Verifies crc32 before adopting. If
+                shardings: Any = None, fallback: bool = False) -> tuple[Any, dict]:
+        """Restore (state, extra). Verifies the manifest digest and every
+        payload's stored crc32 before any byte reaches the model; failures
+        raise :class:`SnapshotCorruptionError` naming the bad payload. If
         ``shardings`` given, leaves are device_put with them (re-sharding
-        onto a *different* mesh is how elastic restarts work)."""
+        onto a *different* mesh is how elastic restarts work).
+        ``fallback=True`` delegates to :meth:`restore_latest_valid`:
+        corrupt steps are quarantined and skipped instead of raised."""
+        if fallback:
+            if step is not None:
+                raise ValueError("fallback=True restores the newest valid "
+                                 "step; do not pin one")
+            state, extra, _ = self.restore_latest_valid(state_like, shardings)
+            return state, extra
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return self._restore_step(step, state_like, shardings)
+
+    def restore_latest_valid(self, state_like: Any = None,
+                             shardings: Any = None,
+                             max_fallbacks: Optional[int] = None
+                             ) -> tuple[Any, dict, int]:
+        """Restore the newest step that passes full verification, walking
+        past (and quarantining) corrupt ones.  Returns
+        ``(state, extra, step)`` — the step actually adopted, which a
+        resuming loop must treat as its start step.  Raises the *last*
+        corruption error if every candidate (or ``max_fallbacks + 1`` of
+        them) fails, and ``FileNotFoundError`` if there are none."""
+        steps = self.available_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        last_err: Optional[SnapshotCorruptionError] = None
+        for k, step in enumerate(steps):
+            if max_fallbacks is not None and k > max_fallbacks:
+                break
+            try:
+                state, extra = self._restore_step(step, state_like, shardings)
+                return state, extra, step
+            except SnapshotCorruptionError as e:
+                q = self._quarantine(step)
+                print(f"  checkpoint step {step} failed verification "
+                      f"({e.payload}); quarantined to {q}, falling back")
+                last_err = e
+        assert last_err is not None
+        raise last_err
+
+    def _restore_step(self, step: int, state_like: Any,
+                      shardings: Any) -> tuple[Any, dict]:
         d = self.dir / f"step_{step:09d}"
-        manifest = json.loads((d / "MANIFEST.json").read_text())
-        if manifest["digest"] != _crc(json.dumps(manifest["leaves"]).encode()):
-            raise IOError(f"manifest digest mismatch in {d}")
+        if not d.exists():
+            raise FileNotFoundError(f"no checkpoint for step {step} under "
+                                    f"{self.dir}")
+        manifest = self._load_manifest(d, step)
         host = []
         for i, meta in enumerate(manifest["leaves"]):
             if meta.get("codec", "").startswith("arena-"):
                 from repro.core import arena
 
-                payloads = []
-                for j, bmeta in enumerate(meta["shards"]):
-                    payload = (d / f"arena_{i:05d}_s{j:03d}.bin").read_bytes()
-                    if _crc(payload) != bmeta["crc32"]:
-                        raise IOError(f"arena leaf {i} shard {j} crc mismatch in {d}")
-                    if bmeta.get("zstd"):
-                        if _zstd is None:
-                            raise IOError(
-                                f"arena leaf {i} shard {j} is zstd-compressed "
-                                "but zstandard is not installed on this host")
-                        payload = _zstd.ZstdDecompressor().decompress(payload)
-                    payloads.append(payload)
-                # the whole bucket decodes to a {name: array} dict leaf
-                host.append(arena.host_restore(meta, payloads))
+                names = [f"arena_{i:05d}_s{j:03d}.bin"
+                         for j in range(len(meta["shards"]))]
+                payloads = [self._read_payload(d, nm, bm, step)
+                            for nm, bm in zip(names, meta["shards"])]
+                # the whole bucket decodes to a {name: array} dict leaf;
+                # a decode blow-up past the CRCs is still corruption (the
+                # descriptor index and the payload disagree), not a crash
+                try:
+                    host.append(arena.host_restore(meta, payloads))
+                except SnapshotCorruptionError:
+                    raise
+                except Exception as e:
+                    raise SnapshotCorruptionError(
+                        f"arena decode of leaf {i} in {d} failed: {e}",
+                        step=step, payload=names[0]) from e
                 continue
             if meta.get("codec", "").startswith("insitu-"):
                 from repro.dist import insitu
 
-                payloads = []
-                for j, bmeta in enumerate(meta["shards"]):
-                    payload = (d / f"leaf_{i:05d}_s{j:03d}.bin").read_bytes()
-                    if _crc(payload) != bmeta["crc32"]:
-                        raise IOError(f"leaf {i} shard {j} crc mismatch in {d}")
-                    if bmeta.get("zstd"):
-                        if _zstd is None:
-                            raise IOError(
-                                f"leaf {i} shard {j} is zstd-compressed but "
-                                "zstandard is not installed on this host")
-                        payload = _zstd.ZstdDecompressor().decompress(payload)
-                    payloads.append(payload)
-                host.append(insitu.host_restore(meta, payloads))
+                names = [f"leaf_{i:05d}_s{j:03d}.bin"
+                         for j in range(len(meta["shards"]))]
+                payloads = [self._read_payload(d, nm, bm, step)
+                            for nm, bm in zip(names, meta["shards"])]
+                try:
+                    host.append(insitu.host_restore(meta, payloads))
+                except SnapshotCorruptionError:
+                    raise
+                except Exception as e:
+                    raise SnapshotCorruptionError(
+                        f"in-situ decode of leaf {i} in {d} failed: {e}",
+                        step=step, payload=names[0]) from e
                 continue
             if "shards" in meta:
                 shape = tuple(meta["shape"])
                 full = np.empty(shape, np.dtype(meta["dtype"]))
                 covered = 0
                 for j, bmeta in enumerate(meta["shards"]):
-                    payload = (d / f"leaf_{i:05d}_s{j:03d}.bin").read_bytes()
-                    if _crc(payload) != bmeta["crc32"]:
-                        raise IOError(f"leaf {i} shard {j} crc mismatch in {d}")
+                    name = f"leaf_{i:05d}_s{j:03d}.bin"
+                    payload = self._read_payload(d, name, bmeta, step)
                     sl = tuple(slice(s, e) for s, e in bmeta["index"])
-                    full[sl] = _decode_leaf(payload, bmeta)
+                    try:
+                        full[sl] = _decode_leaf(payload, bmeta)
+                    except Exception as e:
+                        raise SnapshotCorruptionError(
+                            f"decode of payload {name} in {d} failed: {e}",
+                            step=step, payload=name) from e
                     blk = 1
                     for s, e in bmeta["index"]:
                         blk *= e - s
@@ -541,14 +750,19 @@ class CheckpointManager:
                 for s in shape:
                     total *= s
                 if covered != total:
-                    raise IOError(
-                        f"leaf {i} shards cover {covered}/{total} elements in {d}")
+                    raise SnapshotCorruptionError(
+                        f"leaf {i} shards cover {covered}/{total} elements "
+                        f"in {d}", step=step)
                 host.append(full)
             else:
-                payload = (d / f"leaf_{i:05d}.bin").read_bytes()
-                if _crc(payload) != meta["crc32"]:
-                    raise IOError(f"leaf {i} crc mismatch in {d}")
-                host.append(_decode_leaf(payload, meta))
+                name = f"leaf_{i:05d}.bin"
+                payload = self._read_payload(d, name, meta, step)
+                try:
+                    host.append(_decode_leaf(payload, meta))
+                except Exception as e:
+                    raise SnapshotCorruptionError(
+                        f"decode of payload {name} in {d} failed: {e}",
+                        step=step, payload=name) from e
         if state_like is not None:
             treedef = jax.tree_util.tree_structure(state_like)
         else:

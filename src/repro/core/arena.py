@@ -510,9 +510,22 @@ def payload_encode(blobs: dict) -> bytes:
 
 
 def payload_decode(payload: bytes) -> dict:
-    """Inverse of :func:`payload_encode`."""
+    """Inverse of :func:`payload_encode`.  A short buffer (torn write,
+    truncated file) is rejected up front with a clear error instead of
+    surfacing as an opaque numpy reshape failure mid-decode — the
+    checkpoint manager turns this into a ``SnapshotCorruptionError``."""
+    if len(payload) < 4:
+        raise ValueError(f"truncated payload: {len(payload)} bytes, "
+                         "header length missing")
     hlen = int.from_bytes(payload[:4], "little")
+    if 4 + hlen > len(payload):
+        raise ValueError(f"truncated payload: header needs {4 + hlen} bytes, "
+                         f"have {len(payload)}")
     header = json.loads(payload[4 : 4 + hlen])
+    need = 4 + hlen + sum(int(m["len"]) for m in header.values())
+    if len(payload) < need:
+        raise ValueError(f"truncated payload: arrays need {need} bytes, "
+                         f"have {len(payload)}")
     off = 4 + hlen
     out = {}
     for name in sorted(header):

@@ -218,7 +218,29 @@ def main(argv=None) -> int:
                          "behavior) instead of draining in the background")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under train.supervisor.run_supervised: detected "
+                         "faults quiesce the checkpoint drain, shrink the "
+                         "mesh, restore the newest *valid* snapshot, resume, "
+                         "and grow back — instead of crashing the run")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="with --supervise: inject the canonical seeded "
+                         "fault drill (train.faults.FaultPlan.drill)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="with --supervise: JSON fault plan file "
+                         "(FaultPlan.to_json) — exact replay of a prior run")
+    ap.add_argument("--fault-lost-pods", type=int, default=0)
+    ap.add_argument("--fault-lost-data-rows", type=int, default=0)
+    ap.add_argument("--drain-deadline", type=float, default=30.0,
+                    help="seconds the supervisor waits for the checkpoint "
+                         "drain to quiesce after a fault")
+    ap.add_argument("--grow-back-after", type=int, default=None,
+                    help="degraded-mesh steps before resharding back onto "
+                         "the full mesh (default: stay degraded)")
     args = ap.parse_args(argv)
+
+    if args.supervise:
+        return _main_supervised(args)
 
     cfg = registry.get_config(args.arch, smoke=args.smoke)
     model = registry.build_model(cfg)
@@ -271,6 +293,80 @@ def main(argv=None) -> int:
             put_batch=put)
     print(f"done at step {res.final_step}; loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}"
           f"{' (preempted)' if res.preempted else ''}")
+    return 0
+
+
+def _main_supervised(args) -> int:
+    """--supervise: the elastic fault drill / supervised production loop."""
+    import functools
+    from pathlib import Path
+
+    # lazy: the supervisor pulls in faults/elastic; keep the plain path lean
+    from repro.train import faults as faults_lib
+    from repro.train import supervisor as sup
+
+    cfg = registry.get_config(args.arch, smoke=args.smoke)
+    if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
+        raise SystemExit("--supervise currently drives token-LM families only "
+                         f"(got {cfg.family})")
+    model = registry.build_model(cfg)
+    mesh = make_host_mesh()
+    full_shape = dict(mesh.shape)
+    schedule = args.schedule or ("wsd" if args.arch == "minicpm-2b" else "cosine")
+    if args.grad_comp and (args.fault_lost_pods or args.fault_lost_data_rows):
+        # ef state carries an (n_pods, ...) leading axis — it cannot be
+        # restored across a pod-count change (DESIGN.md §10, out of scope)
+        raise SystemExit("--supervise with mesh shrink requires grad_comp "
+                         "disabled (per-pod error-feedback state does not "
+                         "survive a pod-count change)")
+    scfg = step_lib.TrainStepConfig(
+        peak_lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+        total_steps=args.steps, schedule=schedule,
+        microbatches=args.microbatches,
+        grad_comp=GradCompressionConfig(enabled=args.grad_comp),
+    )
+    print(f"{cfg.name}: {param_count(model.specs())/1e6:.1f}M params on "
+          f"{mesh.devices.size} devices (supervised), schedule={schedule}")
+
+    injector = None
+    if args.fault_plan is not None:
+        plan = faults_lib.FaultPlan.from_json(Path(args.fault_plan).read_text())
+    elif args.fault_seed is not None:
+        plan = faults_lib.FaultPlan.drill(
+            args.fault_seed, args.steps, args.ckpt_every,
+            lost_pods=args.fault_lost_pods,
+            lost_data_rows=args.fault_lost_data_rows)
+    else:
+        plan = None
+    if plan is not None:
+        injector = faults_lib.FaultInjector(plan, ckpt_dir=args.ckpt_dir)
+        print(f"  fault plan: {plan.to_json()}")
+
+    policy = CodecPolicy(mode="sz_pwrel", eb=1e-4) if args.lossy_ckpt else CodecPolicy()
+    ckpt = CheckpointManager(
+        args.ckpt_dir, policy=policy,
+        write_bytes=injector.write_bytes if injector else None,
+        fetch_hook=injector.fetch_hook if injector else None)
+    if injector is not None:
+        injector.manager = ckpt  # deterministic corrupt-newest under async
+
+    builder = functools.partial(
+        sup.make_trainer, model, vocab=cfg.vocab, seq_len=args.seq,
+        step_cfg=scfg,
+        insitu_dir=f"{args.ckpt_dir}/fields" if args.insitu_snapshot else None,
+        insitu_eb=args.insitu_eb, insitu_overlap=not args.insitu_sync)
+    scfg_sup = sup.SupervisorConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        drain_deadline_s=args.drain_deadline,
+        grow_back_after=args.grow_back_after)
+    _, res = sup.run_supervised(builder, full_shape, args.batch, ckpt,
+                                scfg_sup, injector=injector)
+    shrinks = [t for t in res.transitions if t.kind == "shrink"]
+    grows = [t for t in res.transitions if t.kind == "grow"]
+    print(f"done at step {res.final_step}; {len(shrinks)} shrink / "
+          f"{len(grows)} grow transition(s), "
+          f"{sum(t.quarantined for t in shrinks)} snapshot(s) quarantined; "
+          f"loss {res.loss_trace[0][1]:.3f} -> {res.loss_trace[-1][1]:.3f}")
     return 0
 
 

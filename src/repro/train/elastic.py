@@ -20,13 +20,24 @@ def degraded_mesh_shape(old: dict[str, int], lost_pods: int = 0,
                         lost_data_rows: int = 0) -> dict[str, int]:
     """Shrink the mesh along fault domains. Pods are the natural failure
     unit (a DCN partition); within a pod we drop whole data rows so the
-    model axis (which carries TP collectives) stays intact."""
+    model axis (which carries TP collectives) stays intact.  Losses along
+    an axis the mesh doesn't have are an error, not a silent no-op — the
+    supervisor must know its shrink request was impossible."""
+    if lost_pods < 0 or lost_data_rows < 0:
+        raise ValueError(f"negative loss counts (pods={lost_pods}, "
+                         f"data_rows={lost_data_rows})")
     new = dict(old)
-    if "pod" in new and lost_pods:
+    if lost_pods:
+        if "pod" not in new:
+            raise ValueError(f"mesh {old} has no 'pod' axis to lose "
+                             f"{lost_pods} pods from")
         if lost_pods >= new["pod"]:
             raise ValueError("cannot lose every pod")
         new["pod"] -= lost_pods
     if lost_data_rows:
+        if "data" not in new:
+            raise ValueError(f"mesh {old} has no 'data' axis to lose "
+                             f"{lost_data_rows} rows from")
         if lost_data_rows >= new["data"]:
             raise ValueError("cannot lose every data row")
         new["data"] -= lost_data_rows
@@ -51,6 +62,16 @@ def reshard_state(state: Any, model, new_mesh: jax.sharding.Mesh,
 
 def rebalance_batch(global_batch: int, new_mesh: jax.sharding.Mesh) -> int:
     """Largest batch <= global_batch divisible by the new data-parallel
-    extent (keeps per-step token budget as close as possible)."""
+    extent (keeps per-step token budget as close as possible).  A batch
+    that cannot be balanced (zero/negative input, or smaller than the
+    data-parallel extent — which would silently *grow* the token budget)
+    is rejected explicitly."""
     dp = new_mesh.shape.get("pod", 1) * new_mesh.shape.get("data", 1)
-    return max(dp, (global_batch // dp) * dp)
+    if global_batch <= 0:
+        raise ValueError(f"global_batch must be positive, got {global_batch}")
+    out = (global_batch // dp) * dp
+    if out <= 0:
+        raise ValueError(
+            f"global_batch={global_batch} cannot be balanced across the "
+            f"data-parallel extent {dp} of mesh {dict(new_mesh.shape)}")
+    return out

@@ -42,6 +42,13 @@ class LoopConfig:
     # dist.insitu.sharded_compress so large sharded leaves are compressed
     # on their devices and persisted without a host gather)
     snapshot_hook: Optional[Callable[[int, Any], None]] = None
+    # called as fault_check(step) before each step's compute — the fault
+    # detector (on a real fleet: heartbeat/membership watch; in the drill:
+    # train.faults.FaultInjector.check_step).  Raises a
+    # train.faults.TrainingFault to abort into the supervisor, which owns
+    # quiescing the checkpoint drain under a deadline — the loop must NOT
+    # block on ckpt.wait() on that path (the drain may be the casualty)
+    fault_check: Optional[Callable[[int], None]] = None
 
 
 @dataclasses.dataclass
@@ -78,10 +85,14 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
     old_int = signal.signal(signal.SIGINT, _on_signal)
 
     if start_step is None:
-        latest = ckpt.latest_step()
-        start_step = 0 if latest is None else latest
-        if latest is not None:
-            state, extra = ckpt.restore(latest, state_like=state)
+        if ckpt.latest_step() is None:
+            start_step = 0
+        else:
+            # newest *valid* snapshot: corrupt steps are quarantined and
+            # fallen past, and the loop resumes from the step actually
+            # adopted (which may be older than latest_step said)
+            state, extra, start_step = ckpt.restore_latest_valid(
+                state_like=state)
 
     losses: list[float] = []
     stragglers: list[int] = []
@@ -96,8 +107,11 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
         cfg.snapshot_hook(s, st)
         snapshot_s.append(time.time() - t)
 
+    faulted = False
     try:
         while step < cfg.total_steps:
+            if cfg.fault_check is not None:
+                cfg.fault_check(step)
             t0 = time.time()
             batch = pipeline.batch_at(step)
             if extra_batch:
@@ -131,13 +145,28 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
                     # field snapshot must not lag the state you restart from
                     _snapshot(step, state)
                 break
+    except Exception as e:
+        # an injected/detected fault aborts into the supervisor, which
+        # quiesces the drain under its own deadline — blocking on
+        # ckpt.wait() here could hang forever on the very component that
+        # just failed (lazy import: faults is only needed on this path)
+        from repro.train import faults as faults_lib
+
+        faulted = isinstance(e, faults_lib.TrainingFault)
+        if faulted:
+            # the supervisor needs the partial segment's trace (losses up
+            # to the fault) for its loss-continuity check across restore
+            e.partial = LoopResult(step, losses, stragglers, preempted["flag"],
+                                   nan_abort, snapshot_s, step_s)
+        raise
     finally:
-        ckpt.wait()
-        if cfg.snapshot_hook is not None and hasattr(cfg.snapshot_hook, "wait"):
-            # overlapped hooks drain in the background; the loop must not
-            # exit with snapshots still in flight (their device slots and
-            # disk writes would die with the process)
-            cfg.snapshot_hook.wait()
+        if not faulted:
+            ckpt.wait()
+            if cfg.snapshot_hook is not None and hasattr(cfg.snapshot_hook, "wait"):
+                # overlapped hooks drain in the background; the loop must not
+                # exit with snapshots still in flight (their device slots and
+                # disk writes would die with the process)
+                cfg.snapshot_hook.wait()
         signal.signal(signal.SIGTERM, old_term)
         signal.signal(signal.SIGINT, old_int)
 

@@ -1,0 +1,153 @@
+"""Fault-injection harness semantics: seeded plans replay exactly, events
+fire at most once, and the manager-facing hooks inject precisely the armed
+failures (and nothing else)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.train import faults
+
+
+class TestFaultPlan:
+    def test_drill_deterministic_from_seed(self):
+        a = faults.FaultPlan.drill(seed=7, total_steps=40, ckpt_every=5,
+                                   lost_pods=1)
+        b = faults.FaultPlan.drill(seed=7, total_steps=40, ckpt_every=5,
+                                   lost_pods=1)
+        assert a == b and a.to_json() == b.to_json()
+        c = faults.FaultPlan.drill(seed=8, total_steps=40, ckpt_every=5,
+                                   lost_pods=1)
+        assert a != c
+
+    def test_drill_places_pod_loss_after_second_interval(self):
+        p = faults.FaultPlan.drill(seed=0, total_steps=100, ckpt_every=10)
+        (loss,) = [e for e in p.events if e.kind == "pod_loss"]
+        assert 2 * 10 + 1 <= loss.step < 3 * 10 + 1
+        # the corruption rides the same step (check_step applies it before
+        # raising the pod loss, whatever the plan's storage order)
+        same = p.at(loss.step)
+        assert {e.kind for e in same} == {"corrupt_payload", "pod_loss"}
+
+    def test_drill_too_short_rejected(self):
+        with pytest.raises(ValueError, match="too short"):
+            faults.FaultPlan.drill(seed=0, total_steps=10, ckpt_every=5)
+
+    def test_json_roundtrip(self):
+        p = faults.FaultPlan.drill(seed=3, total_steps=50, ckpt_every=6,
+                                   lost_data_rows=1)
+        assert faults.FaultPlan.from_json(p.to_json()) == p
+
+    def test_invalid_kind_and_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            faults.FaultEvent(step=0, kind="meteor_strike")
+        with pytest.raises(ValueError, match="unknown corrupt mode"):
+            faults.FaultEvent(step=0, kind="corrupt_payload", mode="scribble")
+
+
+class TestInjector:
+    def test_pod_loss_fires_once(self):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=5, kind="pod_loss", lost_pods=1)])
+        inj = faults.FaultInjector(plan)
+        for s in range(5):
+            inj.check_step(s)
+        with pytest.raises(faults.PodLossFault) as ei:
+            inj.check_step(5)
+        assert ei.value.step == 5 and ei.value.lost_pods == 1
+        # the rollback replays step 5 — the pod is already gone, no re-fire
+        inj.check_step(5)
+        assert inj.log == [(5, "pod_loss")]
+
+    def test_transient_io_counts_down(self, tmp_path):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=0, kind="drain_io", count=2)])
+        inj = faults.FaultInjector(plan)
+        inj.check_step(0)
+        for _ in range(2):
+            with pytest.raises(OSError, match="injected: transient"):
+                inj.write_bytes(tmp_path / "x.bin", b"abc")
+        inj.write_bytes(tmp_path / "x.bin", b"abc")  # burst exhausted
+        assert (tmp_path / "x.bin").read_bytes() == b"abc"
+
+    def test_poison_until_repair(self, tmp_path):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=0, kind="drain_poison")])
+        inj = faults.FaultInjector(plan)
+        inj.check_step(0)
+        for _ in range(3):  # persistent, not a countdown
+            with pytest.raises(OSError, match="poisoned"):
+                inj.write_bytes(tmp_path / "y.bin", b"z")
+        inj.repair_drain()
+        inj.write_bytes(tmp_path / "y.bin", b"z")
+        assert (tmp_path / "y.bin").read_bytes() == b"z"
+
+    def test_fetch_stall_consumed_once(self):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=2, kind="fetch_stall", stall_s=0.05)])
+        inj = faults.FaultInjector(plan)
+        inj.check_step(2)
+        t0 = time.monotonic()
+        inj.fetch_hook(2)
+        assert time.monotonic() - t0 >= 0.05
+        t0 = time.monotonic()
+        inj.fetch_hook(3)  # armed stall was consumed
+        assert time.monotonic() - t0 < 0.04
+
+    def test_corrupt_needs_ckpt_dir(self):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=0, kind="corrupt_payload")])
+        inj = faults.FaultInjector(plan)
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            inj.check_step(0)
+
+    def test_corrupt_before_first_snapshot_is_noop(self, tmp_path):
+        plan = faults.FaultPlan.from_events(
+            [faults.FaultEvent(step=0, kind="corrupt_payload")])
+        inj = faults.FaultInjector(plan, ckpt_dir=tmp_path)
+        inj.check_step(0)  # no step_* dirs yet: the fault hit thin air
+        assert inj.log == [(0, "corrupt_payload")]
+
+
+class TestCorruptSnapshot:
+    def _snapdir(self, tmp_path):
+        d = tmp_path / "step_000000004"
+        d.mkdir(parents=True)
+        (d / "leaf_00000.bin").write_bytes(bytes(range(64)))
+        (d / "MANIFEST.json").write_text('{"leaves": []}')
+        return d
+
+    def test_bitflip_changes_one_byte(self, tmp_path):
+        d = self._snapdir(tmp_path)
+        before = (d / "leaf_00000.bin").read_bytes()
+        victim = faults.corrupt_snapshot(d, "payload", "bitflip", seed=1)
+        after = victim.read_bytes()
+        assert len(after) == len(before)
+        assert sum(a != b for a, b in zip(before, after)) == 1
+
+    def test_truncate_halves(self, tmp_path):
+        d = self._snapdir(tmp_path)
+        victim = faults.corrupt_snapshot(d, "payload", "truncate")
+        assert victim.stat().st_size == 32
+
+    def test_manifest_target(self, tmp_path):
+        d = self._snapdir(tmp_path)
+        victim = faults.corrupt_snapshot(d, "manifest", "truncate")
+        assert victim.name == "MANIFEST.json"
+
+    def test_deterministic_choice(self, tmp_path):
+        d = self._snapdir(tmp_path)
+        (d / "leaf_00001.bin").write_bytes(bytes(range(64)))
+        v1 = faults.corrupt_snapshot(d, "payload", "bitflip", seed=9).name
+        d2 = self._snapdir(tmp_path / "b")
+        (tmp_path / "b/step_000000004/leaf_00001.bin").write_bytes(bytes(range(64)))
+        v2 = faults.corrupt_snapshot(d2, "payload", "bitflip", seed=9).name
+        assert v1 == v2
+
+
+def test_newest_snapshot_dir(tmp_path):
+    assert faults.newest_snapshot_dir(tmp_path) is None
+    (tmp_path / "step_000000002").mkdir()
+    (tmp_path / "step_000000010").mkdir()
+    assert faults.newest_snapshot_dir(tmp_path).name == "step_000000010"

@@ -269,3 +269,120 @@ def test_elastic_reshard(tmp_path):
                        env=env, timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ELASTIC OK" in r.stdout
+
+
+class TestElasticGuards:
+    """degraded_mesh_shape / rebalance_batch reject impossible requests
+    explicitly instead of KeyError-ing or silently growing the batch."""
+
+    def test_no_pod_axis_rejected(self):
+        from repro.train import elastic
+
+        with pytest.raises(ValueError, match="no 'pod' axis"):
+            elastic.degraded_mesh_shape({"data": 4}, lost_pods=1)
+
+    def test_no_data_axis_rejected(self):
+        from repro.train import elastic
+
+        with pytest.raises(ValueError, match="no 'data' axis"):
+            elastic.degraded_mesh_shape({"pod": 2, "model": 2},
+                                        lost_data_rows=1)
+
+    def test_negative_losses_rejected(self):
+        from repro.train import elastic
+
+        with pytest.raises(ValueError, match="negative"):
+            elastic.degraded_mesh_shape({"pod": 2}, lost_pods=-1)
+
+    def test_total_loss_rejected(self):
+        from repro.train import elastic
+
+        with pytest.raises(ValueError, match="every pod"):
+            elastic.degraded_mesh_shape({"pod": 2}, lost_pods=2)
+        with pytest.raises(ValueError, match="every data row"):
+            elastic.degraded_mesh_shape({"pod": 2, "data": 2},
+                                        lost_data_rows=2)
+
+    def test_zero_loss_is_identity(self):
+        from repro.train import elastic
+
+        assert elastic.degraded_mesh_shape({"pod": 2, "data": 2}) == \
+               {"pod": 2, "data": 2}
+
+    def test_rebalance_rejects_nonpositive_batch(self):
+        from repro.train import elastic
+
+        mesh = elastic.make_degraded_mesh({"data": 1})
+        with pytest.raises(ValueError, match="positive"):
+            elastic.rebalance_batch(0, mesh)
+        with pytest.raises(ValueError, match="positive"):
+            elastic.rebalance_batch(-8, mesh)
+        assert elastic.rebalance_batch(5, mesh) == 5
+
+
+_GROWBACK = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import registry
+    from repro.train import elastic, step as step_lib
+
+    cfg = registry.get_config("minicpm-2b", smoke=True)
+    model = registry.build_model(cfg)
+
+    full = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    with jax.set_mesh(full):
+        state = step_lib.init_state(model, full, jax.random.key(0))
+    ref = [np.asarray(l) for l in jax.tree.leaves(state)]
+
+    ckpt = CheckpointManager("CKPTDIR", async_save=False)
+    ckpt.save(10, state)
+
+    # shrink: restore the snapshot directly onto the degraded mesh
+    shape = elastic.degraded_mesh_shape(dict(full.shape), lost_pods=1)
+    small = elastic.make_degraded_mesh(shape)
+    _, small_shard = step_lib.make_state_specs(model, small)
+    with jax.set_mesh(small):
+        state_s, _, step = ckpt.restore_latest_valid(
+            state_like=state, shardings=small_shard)
+    assert step == 10
+    for r, l in zip(ref, jax.tree.leaves(state_s)):
+        np.testing.assert_array_equal(r, np.asarray(l))
+    ndev = len(jax.tree.leaves(state_s)[0].sharding.mesh.devices.reshape(-1))
+    assert ndev == 4, ndev
+
+    # grow back: live device_put of the degraded state onto the full mesh
+    _, full_shard = step_lib.make_state_specs(model, full)
+    with jax.set_mesh(full):
+        state_f = jax.device_put(state_s, full_shard)
+    for r, l in zip(ref, jax.tree.leaves(state_f)):
+        np.testing.assert_array_equal(r, np.asarray(l))
+    ndev = len(jax.tree.leaves(state_f)[0].sharding.mesh.devices.reshape(-1))
+    assert ndev == 8, ndev
+
+    # rebalance edge cases need a real dp extent > 1
+    assert elastic.rebalance_batch(256, small) == 256
+    assert elastic.rebalance_batch(7, small) == 6
+    try:
+        elastic.rebalance_batch(1, small)  # 1 < dp extent 2: would grow
+        raise SystemExit("rebalance_batch(1) should have raised")
+    except ValueError as e:
+        assert "cannot be balanced" in str(e), e
+    print("GROWBACK OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_grow_back_bitwise(tmp_path):
+    """Snapshot on the full mesh -> verified restore onto the shrunk mesh
+    -> live reshard back onto the full mesh: bitwise-equal state at every
+    hop (the grow-back path the supervisor drives)."""
+    script = tmp_path / "sub.py"
+    script.write_text(_GROWBACK.replace("CKPTDIR", str(tmp_path / "ckpt")))
+    env = dict(os.environ, PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    r = subprocess.run([sys.executable, str(script)], capture_output=True, text=True,
+                       env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "GROWBACK OK" in r.stdout
