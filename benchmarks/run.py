@@ -1,5 +1,6 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report. ``PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]``.
+report. ``PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]
+[--compare BASELINE.json]``.
 
 Sections:
   fig4  rate-distortion curves (PSNR vs bitrate), SZ + ZFP, Nyx + HACC
@@ -14,16 +15,116 @@ tracked across PRs: only full-size runs write the committed
 ``BENCH_throughput.json``; ``--smoke`` and ``--fast`` write the untracked
 ``BENCH_throughput.<mode>.json`` so small-n numbers never overwrite — or
 get compared against — the canonical full-run record.
+
+``--compare BASELINE.json`` prints per-section deltas of the current
+record (the one just produced, or ``--current PATH`` / the committed
+record when no benchmarks ran) against a prior ``BENCH_throughput*.json``
+and **exits nonzero on any >20% regression** — throughput keys must not
+drop, wall keys must not grow.  Compare like modes against like (smoke vs
+smoke): n differs across modes, so cross-mode deltas are meaningless.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 import time
 from pathlib import Path
+from typing import Optional
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_throughput.json"
+
+# ------------------------------------------------------------- compare ----
+
+# direction inference from key names: which way is "better"?
+_HIGHER_SUFFIXES = ("_mbs", "_mbps", "_gbps", "_x", "ratio", "_savings",
+                    "tokens_per_s")
+_HIGHER_SUBSTRINGS = ("throughput", "speedup", "reduction")
+_LOWER_SUFFIXES = ("_s",)
+_LOWER_SUBSTRINGS = ("wall", "blip")
+# noise floor for lower-better (timing) keys: sub-millisecond baselines
+# are timer jitter, not signal
+_MIN_TIMING_BASE_S = 1e-3
+
+
+def key_direction(key: str) -> Optional[str]:
+    """'higher' | 'lower' | None (informational — counts, configs, n)."""
+    k = key.rsplit(".", 1)[-1].lower()
+    if k.endswith(_HIGHER_SUFFIXES) or any(s in k for s in _HIGHER_SUBSTRINGS):
+        return "higher"
+    if k.endswith(_LOWER_SUFFIXES) or any(s in k for s in _LOWER_SUBSTRINGS):
+        return "lower"
+    return None
+
+
+def flatten_bench(obj, prefix: str = "") -> dict:
+    """Nested record -> {'section.path.key': float}.  List entries are
+    labeled by their identifying field (compressor/config/kernel/name)
+    when present, else by index, so baselines stay aligned across runs."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            out.update(flatten_bench(obj[k], f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, list):
+        for i, item in enumerate(obj):
+            label = str(i)
+            if isinstance(item, dict):
+                for idk in ("compressor", "config", "kernel", "name", "arch"):
+                    if idk in item:
+                        label = str(item[idk]).replace(" ", "_")
+                        break
+            out.update(flatten_bench(item, f"{prefix}[{label}]"))
+    elif isinstance(obj, bool):
+        pass  # flags are config, not measurements
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def compare_records(base: dict, cur: dict, threshold: float = 0.20
+                    ) -> tuple[list[str], list[str]]:
+    """Per-section deltas of ``cur`` vs ``base``.  Returns
+    ``(report_lines, regressions)`` — a regression is a directional key
+    moving the wrong way by more than ``threshold``."""
+    lines: list[str] = []
+    regressions: list[str] = []
+    if base.get("mode") != cur.get("mode"):
+        lines.append(f"WARNING: comparing mode={cur.get('mode')!r} against "
+                     f"baseline mode={base.get('mode')!r} — n differs, "
+                     "deltas below are not apples-to-apples")
+    fb, fc = flatten_bench(base), flatten_bench(cur)
+    shared = sorted(set(fb) & set(fc))
+    by_section: dict[str, list] = {}
+    for key in shared:
+        d = key_direction(key)
+        if d is None:
+            continue
+        b, c = fb[key], fc[key]
+        if b <= 0 or (d == "lower" and b < _MIN_TIMING_BASE_S):
+            continue
+        delta = (c - b) / abs(b)
+        regressed = (delta < -threshold) if d == "higher" else (delta > threshold)
+        by_section.setdefault(key.split(".")[0], []).append(
+            (key, b, c, delta, d, regressed))
+        if regressed:
+            arrow = "dropped" if d == "higher" else "grew"
+            regressions.append(f"{key}: {b:.6g} -> {c:.6g} "
+                               f"({arrow} {abs(delta) * 100:.1f}%, "
+                               f"threshold {threshold * 100:.0f}%)")
+    for section in sorted(by_section):
+        rows = by_section[section]
+        worst = max(rows, key=lambda r: (abs(r[3]) if r[5] else 0, abs(r[3])))
+        lines.append(f"[{section}] {len(rows)} keys compared; worst: "
+                     f"{worst[0].split('.', 1)[-1]} "
+                     f"{worst[1]:.6g} -> {worst[2]:.6g} ({worst[3]:+.1%})")
+        for key, b, c, delta, d, regressed in rows:
+            if regressed:
+                lines.append(f"  REGRESSION {key}: {b:.6g} -> {c:.6g} "
+                             f"({delta:+.1%}, {d}-is-better)")
+    if not shared:
+        lines.append("no shared numeric keys — wrong baseline file?")
+        regressions.append("baseline and current records share no keys")
+    return lines, regressions
 
 
 def _section(title: str):
@@ -63,9 +164,49 @@ def write_bench_json(record: dict) -> None:
     print(f"\nwrote {path}")
 
 
-def main() -> None:
-    fast = "--fast" in sys.argv
-    smoke = "--smoke" in sys.argv
+def _do_compare(args, record: Optional[dict]) -> int:
+    base = json.loads(Path(args.compare).read_text())
+    if record is None:
+        cur_path = Path(args.current) if args.current else BENCH_JSON
+        record = json.loads(cur_path.read_text())
+    _section(f"Compare vs baseline {args.compare}")
+    lines, regressions = compare_records(base, record, args.threshold)
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%}:")
+        for r in regressions:
+            print("  " + r)
+        return 1
+    print(f"\nno regressions beyond {args.threshold:.0%}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced n")
+    ap.add_argument("--smoke", action="store_true",
+                    help="throughput sections only, minimal n")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="print per-section deltas vs a prior "
+                         "BENCH_throughput*.json and exit nonzero on any "
+                         "regression beyond --threshold.  With --smoke/"
+                         "--fast the just-produced record is compared; "
+                         "alone, --current (default: the committed "
+                         "BENCH_throughput.json) is compared without "
+                         "re-running anything")
+    ap.add_argument("--current", default=None, metavar="RECORD.json",
+                    help="with --compare and no benchmark run: the record "
+                         "to compare against the baseline")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="regression threshold as a fraction (default 0.20)")
+    args = ap.parse_args(argv)
+    fast, smoke = args.fast, args.smoke
+
+    if args.compare is not None and not (fast or smoke):
+        return _do_compare(args, None)  # compare-only: no benchmark run
+
     n = 32 if (fast or smoke) else 64
     t0 = time.time()
 
@@ -85,7 +226,9 @@ def main() -> None:
         print("snapshot_overlap:", record["snapshot_overlap"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
-        return
+        if args.compare is not None:
+            return _do_compare(args, record)
+        return 0
 
     from benchmarks import (guideline_bench, halo_finder, power_spectrum,
                             rate_distortion, roofline)
@@ -139,7 +282,10 @@ def main() -> None:
     roofline.main()
 
     print(f"\nbenchmarks complete in {time.time() - t0:.1f}s")
+    if args.compare is not None:
+        return _do_compare(args, record)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

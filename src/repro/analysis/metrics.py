@@ -22,6 +22,17 @@ def distortion(original: np.ndarray, reconstructed: np.ndarray) -> Distortion:
     b = np.asarray(reconstructed, np.float64).reshape(-1)
     if a.shape != b.shape:
         raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    if a.size == 0:
+        raise ValueError("distortion of empty arrays is undefined")
+    # reject NaN/Inf up front: they would silently poison every statistic
+    # (mean of NaN is NaN, max of Inf is Inf) and a rate-distortion table
+    # with poisoned rows mis-ranks configurations
+    if not np.isfinite(a).all():
+        raise ValueError("original contains NaN/Inf — distortion metrics "
+                         "are undefined on non-finite data")
+    if not np.isfinite(b).all():
+        raise ValueError("reconstructed contains NaN/Inf — the codec "
+                         "produced non-finite values")
     diff = b - a
     mse = float(np.mean(diff**2))
     rng = float(a.max() - a.min())

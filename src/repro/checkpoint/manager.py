@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import queue
 import shutil
@@ -68,6 +69,12 @@ from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import observatory as obs_observatory
+from repro.obs import trace as obs_trace
+
+_log = logging.getLogger("repro.checkpoint")
 
 try:
     import zstandard as _zstd
@@ -293,14 +300,17 @@ class CheckpointManager:
                  max_in_flight: int = 2, io_retries: int = 3,
                  retry_backoff_s: float = 0.05,
                  write_bytes: Optional[Callable[[Path, bytes], None]] = None,
-                 fetch_hook: Optional[Callable[[int], None]] = None):
+                 fetch_hook: Optional[Callable[[int], None]] = None,
+                 observatory: bool = True):
         """``io_retries``: total write attempts the drain worker makes per
         snapshot before poisoning itself with the error (transient
         ``OSError``/``BlockingIOError`` only; backoff doubles from
         ``retry_backoff_s``, capped at 1 s).  ``write_bytes``/``fetch_hook``
         are injection points (fault drills, alternative filesystems): the
         payload writer and a callable run on the drain thread right before
-        deferred host fetches resolve."""
+        deferred host fetches resolve.  ``observatory``: persist a
+        per-snapshot ``obs_iNNNNNNNNN.json`` compression record beside the
+        manifest (advisory, excluded from the digest — DESIGN.md §11)."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
@@ -311,6 +321,11 @@ class CheckpointManager:
         self.retry_backoff_s = float(retry_backoff_s)
         self._write_hook = write_bytes
         self._fetch_hook = fetch_hook
+        self.observatory = bool(observatory)
+        # shared process-global instruments: every manager in the process
+        # reports into the same registry (no-ops until obs is enabled)
+        self._g_depth = obs_metrics.gauge("ckpt.queue_depth")
+        self._g_inflight = obs_metrics.gauge("ckpt.in_flight")
         self._queue: Optional[queue.Queue] = None
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -342,6 +357,10 @@ class CheckpointManager:
             self._ensure_worker()
             # blocks iff max_in_flight snapshots are already queued/draining
             self._queue.put((step, host, treedef_str, extra or {}, on_complete))
+            # sampled here (training thread) and in the drain loop: between
+            # the two, enqueue spikes and drain progress are both visible
+            self._g_depth.set(self._queue.qsize())
+            self._g_inflight.set(self._queue.unfinished_tasks)
         else:
             try:
                 # same bounded-backoff policy as the drain thread: a
@@ -362,8 +381,12 @@ class CheckpointManager:
     def _drain(self) -> None:
         while True:
             step, host, treedef_str, extra, on_complete = self._queue.get()
+            self._g_depth.set(self._queue.qsize())
             try:
-                self._write_with_retry(step, host, treedef_str, extra)
+                # the span lives on the drain thread — its track in the
+                # exported trace shows exactly how far saves lag training
+                with obs_trace.span("ckpt.drain.save", step=step):
+                    self._write_with_retry(step, host, treedef_str, extra)
             except BaseException as e:
                 self._set_error(e)
             finally:
@@ -373,6 +396,7 @@ class CheckpointManager:
                 except BaseException as e:
                     self._set_error(e)
                 self._queue.task_done()
+                self._g_inflight.set(self._queue.unfinished_tasks)
 
     def _write_with_retry(self, step: int, host: list, treedef_str: str,
                           extra: dict) -> None:
@@ -387,9 +411,17 @@ class CheckpointManager:
                 return
             except SnapshotCorruptionError:
                 raise
-            except OSError:
+            except OSError as e:
                 if attempt + 1 >= self.io_retries:
                     raise
+                # a degraded disk must be visible without reading the step
+                # dir: warn on the logger and count/log the event
+                _log.warning(
+                    "checkpoint step %d transient write error "
+                    "(attempt %d/%d, retrying): %s",
+                    step, attempt + 1, self.io_retries, e)
+                obs_metrics.event("ckpt.retry", step=step,
+                                  attempt=attempt + 1, error=str(e))
                 time.sleep(min(self.retry_backoff_s * (2 ** attempt), 1.0))
 
     def _set_error(self, e: BaseException) -> None:
@@ -424,14 +456,21 @@ class CheckpointManager:
         arena = sys.modules.get("repro.core.arena")
 
         raw = stored = 0
+        records: list[dict] = []  # observatory: one entry per manifest leaf
         for i, arr in enumerate(host):
+            fetch_s = 0.0
             if arena is not None and isinstance(arr, arena.PendingHostArena):
                 # deferred overlapped-snapshot fetch: the one `used` readback
                 # + arena D2H happen here, on the drain thread — the training
-                # thread never waited on them
+                # thread never waited on them.  Timing this resolve is the
+                # observatory's fetch wall: measured around a sync that was
+                # already mandatory, so observing it adds no device sync
                 if self._fetch_hook is not None:
                     self._fetch_hook(step)
-                arr = arr.result()
+                t0 = time.perf_counter()
+                with obs_trace.span("ckpt.drain.fetch", step=step, leaf=i):
+                    arr = arr.result()
+                fetch_s = time.perf_counter() - t0
             if arena is not None and isinstance(arr, arena.HostArena):
                 # arena-batched snapshot bucket: one binary per shard (the
                 # compacted word arena + sidecars), per-leaf descriptors in
@@ -440,20 +479,32 @@ class CheckpointManager:
                 # arena.host_restore (mesh-independent)
                 meta = arena.host_meta(arr)
                 meta["shards"] = []
+                leaf_stored = 0
+                enc_s = wr_s = 0.0
                 for j, blobs in enumerate(arr.shards):
+                    t0 = time.perf_counter()
                     payload = arena.payload_encode(blobs)
                     bmeta: dict[str, Any] = {}
                     if _zstd is not None and self.policy.zstd_level > 0:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
+                    enc_s += time.perf_counter() - t0
+                    t0 = time.perf_counter()
                     self._wb(tmp / f"arena_{i:05d}_s{j:03d}.bin", payload)
+                    wr_s += time.perf_counter() - t0
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
                     stored += len(payload)
+                    leaf_stored += len(payload)
                 raw += arr.nbytes_raw
                 manifest["leaves"].append(meta)
+                records.append({**arr.accounting(), "leaf": i,
+                                "stored_bytes": leaf_stored,
+                                "fetch_s": round(fetch_s, 6),
+                                "encode_s": round(enc_s, 6),
+                                "write_s": round(wr_s, 6)})
                 continue
             if insitu is not None and isinstance(arr, insitu.HostShardedStream):
                 # in-situ compressed on-device: persist each shard's stream
@@ -461,37 +512,85 @@ class CheckpointManager:
                 # restore through insitu.host_restore (mesh-independent)
                 meta = insitu.host_stream_meta(arr)
                 meta["shards"] = []
+                leaf_stored = 0
+                enc_s = wr_s = 0.0
                 for j, (idx, blobs) in enumerate(arr.shards):
+                    t0 = time.perf_counter()
                     payload = insitu.shard_payload_encode(blobs)
                     bmeta: dict[str, Any] = {"index": [list(se) for se in idx]}
                     if _zstd is not None and self.policy.zstd_level > 0:
                         payload = _zstd.ZstdCompressor(
                             level=self.policy.zstd_level).compress(payload)
                         bmeta["zstd"] = True
+                    enc_s += time.perf_counter() - t0
+                    t0 = time.perf_counter()
                     self._wb(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
+                    wr_s += time.perf_counter() - t0
                     bmeta["crc32"] = _crc(payload)
                     bmeta["stored_bytes"] = len(payload)
                     meta["shards"].append(bmeta)
                     stored += len(payload)
+                    leaf_stored += len(payload)
                 raw += arr.nbytes_raw
                 manifest["leaves"].append(meta)
+                records.append({**arr.accounting(), "leaf": i,
+                                "stored_bytes": leaf_stored,
+                                "fetch_s": round(fetch_s, 6),
+                                "encode_s": round(enc_s, 6),
+                                "write_s": round(wr_s, 6)})
                 continue
             if isinstance(arr, _ShardedLeaf):
                 meta: dict[str, Any] = {"shape": list(arr.shape),
                                         "dtype": str(arr.dtype), "shards": []}
+                leaf_raw = leaf_stored = 0
+                enc_s = wr_s = 0.0
                 for j, (idx, block) in enumerate(arr.shards):
+                    t0 = time.perf_counter()
                     payload, bmeta = _encode_leaf(block, self.policy)
+                    enc_s += time.perf_counter() - t0
+                    t0 = time.perf_counter()
                     self._wb(tmp / f"leaf_{i:05d}_s{j:03d}.bin", payload)
+                    wr_s += time.perf_counter() - t0
                     bmeta["index"] = [list(se) for se in idx]
                     meta["shards"].append(bmeta)
                     raw += bmeta["raw_bytes"]
                     stored += bmeta["stored_bytes"]
+                    leaf_raw += bmeta["raw_bytes"]
+                    leaf_stored += bmeta["stored_bytes"]
+                rec = {"leaf": i, "kind": "sharded",
+                       "codec": (meta["shards"][0]["codec"]
+                                 if meta["shards"] else "raw"),
+                       "raw_bytes": leaf_raw, "stored_bytes": leaf_stored,
+                       "shards": len(arr.shards), "launches": 0,
+                       "encode_s": round(enc_s, 6), "write_s": round(wr_s, 6)}
+                if meta["shards"] and "eb" in meta["shards"][0]:
+                    rec["eb"] = meta["shards"][0]["eb"]
             else:
+                t0 = time.perf_counter()
                 payload, meta = _encode_leaf(arr, self.policy)
+                enc_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
                 self._wb(tmp / f"leaf_{i:05d}.bin", payload)
+                wr_s = time.perf_counter() - t0
                 raw += meta["raw_bytes"]
                 stored += meta["stored_bytes"]
+                rec = {"leaf": i, "kind": "leaf", "codec": meta["codec"],
+                       "raw_bytes": meta["raw_bytes"],
+                       "stored_bytes": meta["stored_bytes"],
+                       "shards": 1, "launches": 0,
+                       "encode_s": round(enc_s, 6), "write_s": round(wr_s, 6)}
+                if "eb" in meta:
+                    rec["eb"] = meta["eb"]
             manifest["leaves"].append(meta)
+            records.append(rec)
+        if self.observatory:
+            # advisory sidecar, durable whenever the manifest is (written
+            # strictly before it), excluded from the digest, and emitted
+            # through the module-level writer — NOT self._wb — so fault
+            # drills keyed to payload writes keep their exact semantics
+            doc = obs_observatory.build_doc(step, records, retries=retries)
+            _write_bytes(tmp / obs_observatory.obs_name(step),
+                         json.dumps(doc, indent=1).encode())
         # digest covers the whole manifest body (leaves, treedef, extra,
         # step), not just the leaf index — a bit flip anywhere in the
         # manifest is detected, not just inside a leaf entry
@@ -674,14 +773,26 @@ class CheckpointManager:
                 return state, extra, step
             except SnapshotCorruptionError as e:
                 q = self._quarantine(step)
-                print(f"  checkpoint step {step} failed verification "
-                      f"({e.payload}); quarantined to {q}, falling back")
+                # logger + event counters, not print: a degraded run must
+                # show up in the log stream and the metrics JSONL without
+                # anyone listing the quarantine dir
+                _log.warning(
+                    "checkpoint step %d failed verification (%s); "
+                    "quarantined to %s, falling back", step, e.payload, q)
+                obs_metrics.event("ckpt.corruption", step=step,
+                                  payload=str(e.payload))
+                obs_metrics.event("ckpt.quarantine", step=step, dest=q.name)
                 last_err = e
         assert last_err is not None
         raise last_err
 
     def _restore_step(self, step: int, state_like: Any,
                       shardings: Any) -> tuple[Any, dict]:
+        with obs_trace.span("ckpt.restore", step=step):
+            return self._restore_step_impl(step, state_like, shardings)
+
+    def _restore_step_impl(self, step: int, state_like: Any,
+                           shardings: Any) -> tuple[Any, dict]:
         d = self.dir / f"step_{step:09d}"
         if not d.exists():
             raise FileNotFoundError(f"no checkpoint for step {step} under "

@@ -62,6 +62,7 @@ import numpy as np
 from repro.core import bitpack
 from repro.core import sz as sz_core
 from repro.core import zfp as zfp_core
+from repro.obs import trace as obs_trace
 
 # Megabatch element budget per bucket launch: stacking multiplies every
 # intermediate by the row count, so an unbounded bucket would OOM a device
@@ -494,6 +495,25 @@ class HostArena:
         return sum(int(np.asarray(a).nbytes) for sh in self.shards
                    for a in sh.values())
 
+    def accounting(self) -> dict:
+        """Observatory record skeleton for this bucket (DESIGN.md §11):
+        everything known at encode time — codec, field count, error-bound
+        range, launch count, raw bytes.  The checkpoint manager's drain
+        thread fills in the stored-bytes/timing half when it persists the
+        payloads, so the two sides of the record come from the same pass."""
+        rec = {
+            "kind": "arena", "codec": self.codec,
+            "n_fields": len(self.names),
+            "launches": 1,  # the whole bucket compressed in one launch
+            "shards": len(self.shards),
+            "raw_bytes": int(self.nbytes_raw),
+        }
+        ebs = [float(e) for e in self.eb_i]
+        if ebs:
+            rec["eb_min"] = min(ebs)
+            rec["eb_max"] = max(ebs)
+        return rec
+
 
 def payload_encode(blobs: dict) -> bytes:
     """Named arrays -> one self-describing byte payload (json header +
@@ -542,14 +562,16 @@ def to_host(a: SZArena, bucket: Bucket, halo: bool = True,
     """Pull a (single-shard) device arena to host: **one** scalar readback
     (``used``) followed by **one** D2H copy of the live arena slice — the
     per-leaf path needed both per leaf."""
-    used = int(a.used)  # the single host sync
-    shard = {
-        "arena": np.asarray(a.arena[:used]),  # the single D2H copy
-        "widths": np.asarray(a.widths),
-        "offsets": np.asarray(a.offsets, np.int32),
-        "counts": np.asarray(a.counts, np.int32),
-        "total_bits": np.asarray(a.total_bits, np.int32),
-    }
+    # span wraps the sync that was already mandatory — tracing adds none
+    with obs_trace.span("arena.to_host", n_fields=len(bucket.names)):
+        used = int(a.used)  # the single host sync
+        shard = {
+            "arena": np.asarray(a.arena[:used]),  # the single D2H copy
+            "widths": np.asarray(a.widths),
+            "offsets": np.asarray(a.offsets, np.int32),
+            "counts": np.asarray(a.counts, np.int32),
+            "total_bits": np.asarray(a.total_bits, np.int32),
+        }
     return HostArena(codec, bucket.names, bucket.shapes, bucket.dtypes,
                      bucket.ns, a.padded, 1, halo,
                      [float(v) for v in np.asarray(a.eb_i)], [shard])

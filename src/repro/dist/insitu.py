@@ -58,6 +58,7 @@ from repro.core import bitpack
 from repro.core import sz as sz_core
 from repro.core import zfp as zfp_core
 from repro.dist import sharding as shardlib
+from repro.obs import trace as obs_trace
 
 
 # ------------------------------------------------------------ partition ----
@@ -643,9 +644,12 @@ def arena_to_host(stream: ShardedSZArena) -> arena_core.HostArena:
     ``used`` vector, then one D2H copy of the live arena slab (sliced to
     ``max(used)`` columns) — O(1) host syncs per bucket vs O(#leaves x
     #shards) on the per-leaf path."""
-    used = np.asarray(stream.used, np.int64)  # the single readback
-    max_used = int(used.max()) if used.size else 0
-    slab = np.asarray(stream.arena[:, :max_used])  # the single D2H copy
+    # the span wraps the one mandatory readback — tracing adds no sync
+    with obs_trace.span("insitu.arena_to_host", n_fields=len(stream.names),
+                        grid=int(stream.grid)):
+        used = np.asarray(stream.used, np.int64)  # the single readback
+        max_used = int(used.max()) if used.size else 0
+        slab = np.asarray(stream.arena[:, :max_used])  # the single D2H copy
     widths = np.asarray(stream.widths)
     offsets = np.asarray(stream.offsets, np.int32)
     counts = np.asarray(stream.counts, np.int32)
@@ -698,6 +702,23 @@ class HostShardedStream:
     @property
     def nbytes_raw(self) -> int:
         return int(np.prod(self.shape)) * 4
+
+    def accounting(self) -> dict:
+        """Observatory record skeleton for this in-situ field (DESIGN.md
+        §11): encode-time facts — codec, backend, shard grid, the error
+        bound or rate it was compressed with, raw bytes.  The checkpoint
+        manager adds stored bytes + wall when it persists the shards."""
+        rec = {
+            "kind": "insitu", "codec": self.codec, "backend": self.backend,
+            "launches": 1,  # one sharded compress launch per field
+            "shards": len(self.shards),
+            "raw_bytes": int(self.nbytes_raw),
+        }
+        if "eb_i" in self.params:
+            rec["eb_min"] = rec["eb_max"] = float(self.params["eb_i"])
+        if "rate" in self.params:
+            rec["rate"] = int(self.params["rate"])
+        return rec
 
 
 def _shard_indices(shape, grid):

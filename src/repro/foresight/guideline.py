@@ -95,3 +95,32 @@ def checkpoint_gate(loss_fn: Callable[[dict], float], params: dict,
     lossy = float(loss_fn(reconstructed_params))
     delta = abs(lossy - base) / max(abs(base), 1e-12)
     return delta <= tol, delta
+
+
+def rate_quality_feedback(trajectory: Sequence[dict], window: int = 3,
+                          stall_tol: float = 0.02) -> dict:
+    """Read a run's compression-observatory trajectory
+    (``repro.obs.observatory.run_trajectory``) into the signal an online
+    error-bound controller acts on: the paper's guideline run *during* the
+    run instead of once offline.
+
+    Returns ``{"n", "latest_ratio", "mean_ratio", "trend", "stalled"}``.
+    ``trend`` is the relative ratio change across the last ``window``
+    snapshots; ``stalled`` is True when that change stays within
+    ``stall_tol`` — the "ratio stopped improving, consider loosening the
+    bound (if the domain gates report headroom)" trigger from the ROADMAP's
+    foresight-in-the-loop item."""
+    ratios = [float(t["ratio"]) for t in trajectory if t.get("ratio")]
+    if not ratios:
+        return {"n": 0, "latest_ratio": None, "mean_ratio": None,
+                "trend": None, "stalled": False}
+    recent = ratios[-max(2, window):]
+    trend = ((recent[-1] - recent[0]) / max(abs(recent[0]), 1e-9)
+             if len(recent) >= 2 else 0.0)
+    return {
+        "n": len(ratios),
+        "latest_ratio": ratios[-1],
+        "mean_ratio": float(np.mean(ratios)),
+        "trend": trend,
+        "stalled": len(recent) >= 2 and abs(trend) <= stall_tol,
+    }

@@ -39,6 +39,7 @@ Writes experiments/costrun/<arch>__<shape>__<mesh>.json.
 
 import argparse
 import json
+import logging
 import sys
 import time
 import traceback
@@ -49,13 +50,16 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.dist import sharding
-from repro.launch.dryrun import collective_bytes
+from repro.launch.dryrun import _ensure_cli_logging, collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.models import flags
 from repro.models import layers as L
+from repro.obs import metrics as obs_metrics
 from repro.train import step as step_lib
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "costrun"
+
+_log = logging.getLogger("repro.launch.costrun")
 
 LINEAR_FAMILIES = {"ssm", "hybrid"}
 
@@ -224,13 +228,24 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
                     bytes_per_device=total["bytes"],
                     collective_bytes_per_device=total["collective"],
                     t_scale=mult)
-        print(f"[{arch} x {shape_name} x {mesh_name}] cost ok in {cell['compile_s']}s "
-              f"flops/dev={total['flops']:.3e} bytes/dev={total['bytes']:.3e} "
-              f"coll/dev={total['collective']:.3e}")
+        obs_metrics.event("costrun.cell", arch=arch, shape=shape_name,
+                          mesh=mesh_name, status="ok",
+                          compile_s=cell["compile_s"],
+                          flops_per_device=total["flops"],
+                          bytes_per_device=total["bytes"],
+                          collective_bytes_per_device=total["collective"],
+                          t_scale=mult)
+        _log.info("[%s x %s x %s] cost ok in %ss flops/dev=%.3e "
+                  "bytes/dev=%.3e coll/dev=%.3e", arch, shape_name, mesh_name,
+                  cell["compile_s"], total["flops"], total["bytes"],
+                  total["collective"])
     except Exception as e:  # noqa: BLE001
         cell.update(status="error", error=f"{type(e).__name__}: {e}",
                     traceback=traceback.format_exc()[-1500:])
-        print(f"[{arch} x {shape_name} x {mesh_name}] COST FAILED: {cell['error']}")
+        obs_metrics.event("costrun.error", arch=arch, shape=shape_name,
+                          mesh=mesh_name, error=cell["error"])
+        _log.error("[%s x %s x %s] COST FAILED: %s",
+                   arch, shape_name, mesh_name, cell["error"])
     finally:
         flags.costing(False)
     return cell
@@ -241,7 +256,14 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", choices=list(registry.ARCH_IDS))
     ap.add_argument("--shape", choices=list(registry.SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="also append per-cell records to DIR/metrics.jsonl")
     args = ap.parse_args(argv)
+    _ensure_cli_logging()
+    if args.metrics_dir is not None:
+        mdir = Path(args.metrics_dir)
+        mdir.mkdir(parents=True, exist_ok=True)
+        obs_metrics.enable(mdir / "metrics.jsonl")
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     archs = [args.arch] if args.arch else list(registry.ARCH_IDS)
     shapes = [args.shape] if args.shape else list(registry.SHAPES)
@@ -252,6 +274,8 @@ def main(argv=None) -> int:
             tag = f"{arch}__{shape}__{cell['mesh']}"
             (OUT_DIR / f"{tag}.json").write_text(json.dumps(cell, indent=1))
             fails += cell["status"] == "error"
+    if obs_metrics.enabled():
+        obs_metrics.export_snapshot(final=True)
     return 1 if fails else 0
 
 

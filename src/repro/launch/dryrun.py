@@ -33,6 +33,7 @@ Usage:
 
 import argparse
 import json
+import logging
 import re
 import sys
 import time
@@ -46,9 +47,24 @@ from repro.configs import registry
 from repro.dist import sharding
 from repro.launch.mesh import make_production_mesh
 from repro.models import layers as L
+from repro.obs import metrics as obs_metrics
 from repro.train import step as step_lib
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_log = logging.getLogger("repro.launch.dryrun")
+
+
+def _ensure_cli_logging() -> None:
+    """CLI entry points keep their human-readable output by routing the
+    ``repro.launch`` logger to stderr; library callers (tests, costrun)
+    inherit whatever handler config the host process set up."""
+    root = logging.getLogger("repro.launch")
+    if not root.handlers:
+        h = logging.StreamHandler()
+        h.setFormatter(logging.Formatter("%(message)s"))
+        root.addHandler(h)
+        root.setLevel(logging.INFO)
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -234,30 +250,46 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "device_savings_x": round(dev_off / dev_on, 2) if dev_on else None,
                 "grad_comp_lowered": bool(grad_comp and multi_pod),
             }
+        # one structured record per cell into the shared metrics JSONL
+        # stream (no-op unless repro.obs is enabled, e.g. via --metrics-dir)
+        obs_metrics.event(
+            "dryrun.cell", arch=arch, shape=shape_name, mesh=mesh_name,
+            status="ok", compile_s=cell["compile_s"],
+            flops_per_device=cell["flops_per_device"],
+            bytes_accessed_per_device=cell["bytes_accessed_per_device"],
+            peak_bytes_per_device=cell["peak_bytes_per_device"],
+            fits_16gb=cell["fits_16gb"],
+            collective_total=cell["collective_total"])
         if verbose:
-            print(f"[{arch} x {shape_name} x {mesh_name}] OK in {cell['compile_s']}s  "
-                  f"flops/dev={cell['flops_per_device']:.3e}  "
-                  f"peak/dev={peak/2**30:.2f}GiB  coll={sum(coll.values())/2**20:.1f}MiB")
-            print("  memory_analysis:", cell["memory"])
-            print("  cost_analysis: flops=%.3e bytes=%.3e" %
-                  (cell["flops_per_device"], cell["bytes_accessed_per_device"]))
-            print("  collective_bytes/dev:",
-                  "  ".join(f"{k}={v/2**20:.2f}MiB" for k, v in coll.items()))
+            _log.info(
+                "[%s x %s x %s] OK in %ss  flops/dev=%.3e  peak/dev=%.2fGiB  "
+                "coll=%.1fMiB", arch, shape_name, mesh_name, cell["compile_s"],
+                cell["flops_per_device"], peak / 2**30,
+                sum(coll.values()) / 2**20)
+            _log.info("  memory_analysis: %s", cell["memory"])
+            _log.info("  cost_analysis: flops=%.3e bytes=%.3e",
+                      cell["flops_per_device"], cell["bytes_accessed_per_device"])
+            _log.info("  collective_bytes/dev: %s",
+                      "  ".join(f"{k}={v/2**20:.2f}MiB" for k, v in coll.items()))
             if "grad_wire" in cell:
                 gw = cell["grad_wire"]
-                print(f"  grad wire ({gw['params']/1e6:.1f}M params, "
-                      f"{gw['n_pods']} pods): format {gw['bytes_per_param']['off']}"
-                      f"->{gw['bytes_per_param']['on']:.3f} B/param "
-                      f"({gw['format_savings_x']}x); per-device hop "
-                      f"{gw['device_hop_bytes']['off']/2**20:.1f}MiB -> "
-                      f"{gw['device_hop_bytes']['on']/2**20:.1f}MiB "
-                      f"({gw['device_savings_x']}x, lowered={gw['grad_comp_lowered']})")
+                _log.info(
+                    "  grad wire (%.1fM params, %d pods): format %s->%.3f "
+                    "B/param (%sx); per-device hop %.1fMiB -> %.1fMiB "
+                    "(%sx, lowered=%s)", gw["params"] / 1e6, gw["n_pods"],
+                    gw["bytes_per_param"]["off"], gw["bytes_per_param"]["on"],
+                    gw["format_savings_x"], gw["device_hop_bytes"]["off"] / 2**20,
+                    gw["device_hop_bytes"]["on"] / 2**20, gw["device_savings_x"],
+                    gw["grad_comp_lowered"])
     except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
         cell["status"] = "error"
         cell["error"] = f"{type(e).__name__}: {e}"
         cell["traceback"] = traceback.format_exc()[-2000:]
+        obs_metrics.event("dryrun.error", arch=arch, shape=shape_name,
+                          mesh=mesh_name, error=cell["error"])
         if verbose:
-            print(f"[{arch} x {shape_name} x {mesh_name}] FAILED: {cell['error']}")
+            _log.error("[%s x %s x %s] FAILED: %s",
+                       arch, shape_name, mesh_name, cell["error"])
     return cell
 
 
@@ -270,7 +302,15 @@ def main(argv=None) -> int:
     ap.add_argument("--grad-comp", action="store_true",
                     help="enable compressed cross-pod gradient hop")
     ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--metrics-dir", default=None,
+                    help="also append per-cell records to DIR/metrics.jsonl")
     args = ap.parse_args(argv)
+
+    _ensure_cli_logging()
+    if args.metrics_dir is not None:
+        mdir = Path(args.metrics_dir)
+        mdir.mkdir(parents=True, exist_ok=True)
+        obs_metrics.enable(mdir / "metrics.jsonl")
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -290,7 +330,9 @@ def main(argv=None) -> int:
                 (out_dir / f"{tag}.json").write_text(json.dumps(cell, indent=2))
                 if cell["status"] == "error":
                     failures += 1
-    print(f"dry-run complete; {failures} failures")
+    _log.info("dry-run complete; %d failures", failures)
+    if obs_metrics.enabled():
+        obs_metrics.export_snapshot(final=True)
     return 1 if failures else 0
 
 

@@ -13,6 +13,8 @@ newest checkpoint automatically; SIGTERM checkpoints and exits cleanly.
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +25,8 @@ from repro.data.tokens import DataConfig, TokenPipeline
 from repro.dist.collectives import GradCompressionConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models.spec import param_count
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import loop as loop_lib
 from repro.train import step as step_lib
 
@@ -77,6 +81,7 @@ def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
     snap = CheckpointManager(out_dir, keep_last=2, async_save=overlap,
                              max_in_flight=slots)
     pool = arena_core.SnapshotSlots(slots) if (overlap and arena) else None
+    _c_launch = obs_metrics.counter("snapshot.launches")
     compiled: dict = {}  # leaf key -> jitted per-leaf compress (or None)
     cache: dict = {"sig": None, "kbuckets": [], "buckets": [], "fns": [],
                    "legacy": []}
@@ -136,22 +141,34 @@ def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
                     pool.acquire()  # backpressure: <= `slots` arenas on device
                     acquired = True
                 for k, b in enumerate(cache["kbuckets"]):
-                    a = arena_core.szk_compress_bucket(
-                        [by_key[nm] for nm in b.names], b, eb)
-                    fields[f"karena{k:03d}"] = (
-                        arena_core.to_host_async(a, b, codec=arena_core.CODEC_SZK)
-                        if overlap else
-                        arena_core.to_host(a, b, codec=arena_core.CODEC_SZK))
+                    # dispatch-only span: the launch is async, so this
+                    # times bucket dispatch, not the kernel itself
+                    with obs_trace.span("snapshot.bucket", kind="szk",
+                                        bucket=k, n_fields=len(b.names)):
+                        a = arena_core.szk_compress_bucket(
+                            [by_key[nm] for nm in b.names], b, eb)
+                        fields[f"karena{k:03d}"] = (
+                            arena_core.to_host_async(a, b,
+                                                     codec=arena_core.CODEC_SZK)
+                            if overlap else
+                            arena_core.to_host(a, b,
+                                               codec=arena_core.CODEC_SZK))
+                    _c_launch.inc()
                 for k, (b, fn) in enumerate(zip(cache["buckets"], cache["fns"])):
-                    stream = fn(*[by_key[nm] for nm in b.names])
-                    fields[f"arena{k:03d}"] = (
-                        insitu.arena_to_host_async(stream) if overlap
-                        else insitu.arena_to_host(stream))
+                    with obs_trace.span("snapshot.bucket", kind="flat",
+                                        bucket=k, n_fields=len(b.names)):
+                        stream = fn(*[by_key[nm] for nm in b.names])
+                        fields[f"arena{k:03d}"] = (
+                            insitu.arena_to_host_async(stream) if overlap
+                            else insitu.arena_to_host(stream))
+                    _c_launch.inc()
                 for key in cache["legacy"]:
                     _legacy_compress(key, by_key[key], fields)
+                    _c_launch.inc()
             else:
                 for key, leaf in named:
                     _legacy_compress(key, leaf, fields)
+                    _c_launch.inc()
             if not fields:
                 if acquired:
                     pool.release()
@@ -187,6 +204,35 @@ def build_insitu_hook(mesh, out_dir: str, eb: float, min_bytes: int = 1 << 20,
     hook.manager = snap
     hook.slots = pool
     return hook
+
+
+def _setup_obs(args) -> Optional[Path]:
+    """Wire --metrics-dir / --trace into the process-global observability
+    layer.  Returns the output dir (None when observability is off)."""
+    if args.metrics_dir is None and not args.trace:
+        return None
+    out = Path(args.metrics_dir if args.metrics_dir is not None
+               else args.ckpt_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    # metrics always come on with observability (the registry is the cheap
+    # half); the JSONL sink only attaches when --metrics-dir names a home
+    obs_metrics.enable(out / "metrics.jsonl" if args.metrics_dir is not None
+                       else None)
+    if args.trace:
+        obs_trace.enable()
+    return out
+
+
+def _finish_obs(out: Optional[Path], args, tag: str) -> None:
+    """End-of-run export: final metrics line + human summary, and the
+    Chrome-trace JSON (one track per thread — open in chrome://tracing)."""
+    if out is None:
+        return
+    obs_metrics.export_snapshot(final=True)
+    print(obs_metrics.summary())
+    if args.trace:
+        p = obs_trace.export(out / f"trace_{tag}.json")
+        print(f"  trace written to {p} ({len(obs_trace.TRACER.events)} spans)")
 
 
 def main(argv=None) -> int:
@@ -237,10 +283,23 @@ def main(argv=None) -> int:
     ap.add_argument("--grow-back-after", type=int, default=None,
                     help="degraded-mesh steps before resharding back onto "
                          "the full mesh (default: stay degraded)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable run-wide telemetry (repro.obs): counters, "
+                         "gauges, step_s/queue-depth histograms exported as "
+                         "JSONL lines into <dir>/metrics.jsonl, plus an "
+                         "end-of-run summary")
+    ap.add_argument("--trace", action="store_true",
+                    help="record nested span timers and write Chrome-trace "
+                         "JSON (trace_*.json, one track per thread) into "
+                         "--metrics-dir (or --ckpt-dir)")
     args = ap.parse_args(argv)
 
+    obs_out = _setup_obs(args)
     if args.supervise:
-        return _main_supervised(args)
+        try:
+            return _main_supervised(args)
+        finally:
+            _finish_obs(obs_out, args, tag="supervised")
 
     cfg = registry.get_config(args.arch, smoke=args.smoke)
     model = registry.build_model(cfg)
@@ -293,13 +352,13 @@ def main(argv=None) -> int:
             put_batch=put)
     print(f"done at step {res.final_step}; loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}"
           f"{' (preempted)' if res.preempted else ''}")
+    _finish_obs(obs_out, args, tag="train")
     return 0
 
 
 def _main_supervised(args) -> int:
     """--supervise: the elastic fault drill / supervised production loop."""
     import functools
-    from pathlib import Path
 
     # lazy: the supervisor pulls in faults/elastic; keep the plain path lean
     from repro.train import faults as faults_lib

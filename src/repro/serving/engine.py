@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as L
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -35,6 +37,10 @@ class Request:
     max_new_tokens: int
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # stamped at submit() so completion can observe end-to-end latency
+    # (queue wait + every tick the request was live) without the engine
+    # keeping a side table
+    submitted_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -59,9 +65,14 @@ class ServingEngine:
         self._step = jax.jit(
             lambda p, c, t, i: model.decode_step(p, c, t, i, self.codec))
         self.ticks = 0
+        # process-global instruments (no-ops until repro.obs is enabled)
+        self._h_request = obs_metrics.histogram("serving.request_s")
+        self._h_tick = obs_metrics.histogram("serving.tick_s")
+        self._g_occupancy = obs_metrics.gauge("serving.batch_occupancy")
 
     # -------------------------------------------------------- lifecycle --
     def submit(self, req: Request) -> None:
+        req.submitted_t = time.time()
         self.pending.append(req)
 
     def _admit(self) -> None:
@@ -85,8 +96,10 @@ class ServingEngine:
         counter — homogeneous-phase batching; prompts are fed token by
         token, which keeps the engine exactly the decode_step the dry-run
         lowers.)"""
+        t0 = time.time()
         self._admit()
         live = self._live()
+        self._g_occupancy.set(len(live) / self.cfg.batch_slots)
         if not live:
             return 0
         tokens = np.zeros(self.cfg.batch_slots, np.int32)
@@ -98,9 +111,12 @@ class ServingEngine:
             else:
                 tokens[i] = req.out_tokens[-1] if req.out_tokens else 0
         index = int(self.pos[live[0]])  # homogeneous position
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(tokens), jnp.int32(index))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1)) if self.cfg.greedy else None
+        with obs_trace.span("serving.tick", live=len(live), index=index):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(tokens),
+                                            jnp.int32(index))
+            nxt = (np.asarray(jnp.argmax(logits, axis=-1))
+                   if self.cfg.greedy else None)
         for i in live:
             req = self.slots[i]
             self.pos[i] += 1
@@ -112,7 +128,10 @@ class ServingEngine:
                         self.pos[i] >= self.cfg.max_len - 1:
                     req.done = True
                     self.slots[i] = None
+                    if req.submitted_t is not None:
+                        self._h_request.observe(time.time() - req.submitted_t)
         self.ticks += 1
+        self._h_tick.observe(time.time() - t0)
         return len(live)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:

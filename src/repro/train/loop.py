@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.tokens import TokenPipeline
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -101,11 +103,18 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
     nan_abort = False
     step = start_step
     hb = Path(cfg.heartbeat_path) if cfg.heartbeat_path else None
+    # process-global instruments (no-ops until repro.obs is enabled): the
+    # step histogram is what the end-of-run summary's p50/p99 come from
+    _h_step = obs_metrics.histogram("train.step_s")
+    _h_snap = obs_metrics.histogram("train.snapshot_dispatch_s")
 
     def _snapshot(s, st) -> None:
         t = time.time()
-        cfg.snapshot_hook(s, st)
-        snapshot_s.append(time.time() - t)
+        with obs_trace.span("snapshot.dispatch", step=s):
+            cfg.snapshot_hook(s, st)
+        dt = time.time() - t
+        snapshot_s.append(dt)
+        _h_snap.observe(dt)
 
     faulted = False
     try:
@@ -113,28 +122,39 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
             if cfg.fault_check is not None:
                 cfg.fault_check(step)
             t0 = time.time()
-            batch = pipeline.batch_at(step)
-            if extra_batch:
-                batch = {**batch, **extra_batch}
-            if put_batch is not None:
-                batch = put_batch(batch)
-            state, metrics = train_step(state, batch)
-            loss = float(jax.block_until_ready(metrics["loss"]))
+            with obs_trace.span("train.step", step=step):
+                batch = pipeline.batch_at(step)
+                if extra_batch:
+                    batch = {**batch, **extra_batch}
+                if put_batch is not None:
+                    batch = put_batch(batch)
+                state, metrics = train_step(state, batch)
+                loss = float(jax.block_until_ready(metrics["loss"]))
             dt = time.time() - t0
             step_s.append(dt)
+            _h_step.observe(dt)
             if not np.isfinite(loss):
                 nan_abort = True
+                obs_metrics.event("train.nan", step=step)
                 if cfg.abort_on_nan:
                     break
             losses.append(loss)
             if dt > cfg.step_deadline_s:
                 stragglers.append(step)
+                obs_metrics.event("train.straggler", step=step,
+                                  step_s=round(dt, 6))
             if hb is not None:
                 hb.write_text(json.dumps({"step": step, "t": time.time(), "loss": loss}))
             step += 1
+            if cfg.log_every and step % cfg.log_every == 0:
+                # periodic metrics line: step_s percentiles plus whatever
+                # the drain thread's gauges read right now (queue depth,
+                # in-flight) — the run's JSONL heartbeat
+                obs_metrics.export_snapshot(step=step)
             snapped = False
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
-                ckpt.save(step, state, extra={"data_step": step})
+                with obs_trace.span("ckpt.save", step=step):
+                    ckpt.save(step, state, extra={"data_step": step})
                 if cfg.snapshot_hook is not None:
                     _snapshot(step, state)
                     snapped = True
@@ -154,6 +174,8 @@ def run(train_step: Callable, state: Any, pipeline: TokenPipeline,
 
         faulted = isinstance(e, faults_lib.TrainingFault)
         if faulted:
+            obs_metrics.event("train.fault", step=step,
+                              fault=type(e).__name__)
             # the supervisor needs the partial segment's trace (losses up
             # to the fault) for its loss-continuity check across restore
             e.partial = LoopResult(step, losses, stragglers, preempted["flag"],

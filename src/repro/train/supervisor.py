@@ -53,6 +53,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import elastic
 from repro.train import faults as faults_lib
 from repro.train import loop as loop_lib
@@ -269,11 +271,19 @@ def run_supervised(builder: Callable[[dict, int], Trainer],
                 "global_batch": trainer.global_batch})
             log(f"  supervisor: {f} — quiescing drain "
                 f"(deadline {cfg.drain_deadline_s}s)")
-            drained, derr = _quiesce_all(trainer, ckpt, cfg.drain_deadline_s)
+            obs_metrics.event("supervisor.casualty", step=f.step,
+                              fault=type(f).__name__,
+                              lost_pods=f.lost_pods,
+                              lost_data_rows=f.lost_data_rows)
+            with obs_trace.span("supervisor.quiesce", step=f.step):
+                drained, derr = _quiesce_all(trainer, ckpt,
+                                             cfg.drain_deadline_s)
             if derr is not None:
                 # the drain's casualty is at most the newest in-flight
                 # snapshot — exactly what the restore is allowed to lose
                 log(f"  supervisor: drain error consumed: {derr}")
+                obs_metrics.event("supervisor.drain_error", step=f.step,
+                                  error=repr(derr))
             if injector is not None and hasattr(injector, "repair_drain"):
                 injector.repair_drain()  # "replace" the drain worker host
 
@@ -283,7 +293,8 @@ def run_supervised(builder: Callable[[dict, int], Trainer],
                 global_batch, elastic.make_degraded_mesh(new_shape))
             trainer = builder(new_shape, new_batch)
             quarantined_before = len(list(ckpt.dir.glob("quarantine/*")))
-            with jax.set_mesh(trainer.mesh):
+            with jax.set_mesh(trainer.mesh), \
+                    obs_trace.span("supervisor.restore", at_step=f.step):
                 state, _, rstep = ckpt.restore_latest_valid(
                     state_like=state, shardings=trainer.shardings,
                     max_fallbacks=cfg.max_restore_fallbacks)
@@ -313,6 +324,10 @@ def run_supervised(builder: Callable[[dict, int], Trainer],
             log(f"  supervisor: restored step {rstep} onto mesh "
                 f"{new_shape} (batch {new_batch}, "
                 f"{quarantined} quarantined)")
+            obs_metrics.event("supervisor.shrink", at_step=f.step,
+                              resume_step=rstep, mesh=str(new_shape),
+                              batch=new_batch, quarantined=quarantined,
+                              drain_clean=drained)
             step = rstep
             degraded = True
             if cfg.grow_back_after is not None:
@@ -342,12 +357,15 @@ def run_supervised(builder: Callable[[dict, int], Trainer],
             # grow back: the live state reshards onto the full mesh —
             # bitwise carry (device_put), no restore, zero lost steps
             trainer = builder(dict(full_shape), global_batch)
-            with jax.set_mesh(trainer.mesh):
+            with jax.set_mesh(trainer.mesh), \
+                    obs_trace.span("supervisor.grow_back", step=step):
                 state = jax.device_put(state, trainer.shardings)
             result.transitions.append(Transition(
                 "grow", step, step, dict(full_shape), global_batch))
             log(f"  supervisor: grew back to mesh {full_shape} at "
                 f"step {step}")
+            obs_metrics.event("supervisor.grow", step=step,
+                              mesh=str(full_shape), batch=global_batch)
             degraded = False
             grow_at = None
             if trace:

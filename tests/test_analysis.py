@@ -133,6 +133,55 @@ class TestMetrics:
         assert metrics.bitrate(nbytes_compressed=4_000, n_values=8_000) == 4.0
         assert metrics.compression_ratio(4_000, 8_000) == 8.0
 
+    def test_constant_field_zero_variance(self):
+        """A constant field has zero range: PSNR is defined as +inf (no
+        signal to distort), every error statistic is exactly zero."""
+        x = np.full(256, 3.25, np.float32)
+        d = metrics.distortion(x, x.copy())
+        assert d.value_range == 0.0
+        assert d.psnr == np.inf
+        assert d.mse == 0.0 and d.max_abs_err == 0.0 and d.mre == 0.0
+
+    def test_constant_field_with_error_still_finite_stats(self):
+        x = np.full(100, 2.0, np.float64)
+        y = x + 0.5
+        d = metrics.distortion(x, y)
+        assert d.psnr == np.inf  # range 0: PSNR stays the defined inf
+        assert d.mse == pytest.approx(0.25)
+        assert d.max_rel_err == pytest.approx(0.25)
+
+    @pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+    def test_nonfinite_original_rejected(self, bad):
+        x = np.linspace(0, 1, 64)
+        xb = x.copy()
+        xb[7] = bad
+        with pytest.raises(ValueError, match="original contains NaN/Inf"):
+            metrics.distortion(xb, x)
+
+    @pytest.mark.parametrize("bad", [np.nan, np.inf])
+    def test_nonfinite_reconstruction_rejected(self, bad):
+        x = np.linspace(0, 1, 64)
+        yb = x.copy()
+        yb[-1] = bad
+        with pytest.raises(ValueError, match="reconstructed contains"):
+            metrics.distortion(x, yb)
+
+    def test_empty_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            metrics.distortion(np.zeros(0), np.zeros(0))
+
+    def test_dtype_mixed_inputs(self):
+        """float32 original vs float64 reconstruction (and int originals)
+        must compare in a common float64 space, not raise or truncate."""
+        x32 = np.linspace(0, 1, 1000, dtype=np.float32)
+        y64 = x32.astype(np.float64) + 1e-3
+        d = metrics.distortion(x32, y64)
+        assert d.max_abs_err == pytest.approx(1e-3, rel=1e-5)
+        xi = np.arange(100, dtype=np.int32)
+        yf = xi.astype(np.float32)
+        d2 = metrics.distortion(xi, yf)
+        assert d2.mse == 0.0
+
 
 class TestData:
     def test_nyx_ranges_match_table2(self, nyx):
