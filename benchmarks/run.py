@@ -7,6 +7,8 @@ Sections:
   fig5  power-spectrum pk-ratio gate at the best-fit configs
   fig6  FoF halo mass-function / count-ratio gate
   fig7-10  throughput: stage breakdown, modeled TPU kernels, rate scaling
+  serving  continuous-batching load generator: Poisson arrivals, none vs
+        blockfloat8 KV, equal-pool-bytes concurrency (>=1.8x gate)
   vd    §V-D guideline end-to-end (best-fit configs + overall CR)
   roofline  per (arch x shape x mesh) terms from the dry-run artifacts
 
@@ -135,7 +137,7 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
                    mode: str = "full") -> dict:
     """Figs 7-10 + the packer microbench; returns the json-serializable
     record written by :func:`write_bench_json`."""
-    from benchmarks import throughput
+    from benchmarks import serving_load, throughput
 
     record = {
         "schema": "bench_throughput/v1",
@@ -151,6 +153,7 @@ def run_throughput(n: int, vs_bitrate_n: int, smoke: bool = False,
             n_leaves=60 if smoke else 200, iters=2 if smoke else 5),
         "snapshot_overlap": throughput.snapshot_overlap(
             snaps=2 if smoke else 3),
+        "serving": serving_load.bench_section(smoke=smoke),
     }
     if not smoke:
         record["throughput_vs_bitrate"] = throughput.throughput_vs_bitrate(n=vs_bitrate_n)
@@ -224,6 +227,9 @@ def main(argv=None) -> int:
         print("insitu:", record["insitu"])
         print("snapshot_dispatch:", record["snapshot_dispatch"])
         print("snapshot_overlap:", record["snapshot_overlap"])
+        for r in record["serving"]["load"]:
+            print("serving:", r)
+        print("serving equal-bytes:", record["serving"]["equal_bytes"])
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         if args.compare is not None:
@@ -269,6 +275,9 @@ def main(argv=None) -> int:
     print("insitu:", record["insitu"])
     print("snapshot_dispatch:", record["snapshot_dispatch"])
     print("snapshot_overlap:", record["snapshot_overlap"])
+    for r in record["serving"]["load"]:
+        print("serving:", r)
+    print("serving equal-bytes:", record["serving"]["equal_bytes"])
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

@@ -1,0 +1,184 @@
+"""Serving load generator: Poisson arrivals against the continuous-batching
+engine, ``none`` vs ``blockfloat8`` KV.
+
+Two measurements back the serving-capacity claim of the paper's fixed-rate
+mode applied to inference state:
+
+  * ``load_sweep`` — requests arrive as a Poisson process at each offered
+    rate; reports p50/p99 end-to-end request latency, decoded tokens/s and
+    mean cache occupancy per codec. Latency is wall-clock from arrival to
+    completion (queue wait included), so admission behaviour shows up in
+    the tail, not just the mean.
+  * ``equal_bytes_concurrency`` — size one page pool in BYTES, admit until
+    the pool defers, and count concurrent requests per codec. blockfloat8
+    pages cost ``(1 + 4/head_dim)/2`` of bf16, so at head_dim 64 the pool
+    admits ~1.88x the requests — the CI smoke gate asserts >= 1.8x. Both
+    the analytic capacity (pure byte accounting) and the live admitted
+    count are recorded; they must agree.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.serving_load --smoke
+or via the driver (writes the ``serving`` section of BENCH_throughput*.json):
+PYTHONPATH=src python -m benchmarks.run --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import layers as L
+from repro.models.spec import init_params
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.kv_pages import PagePool
+
+# head_dim 64 so the bf8 page-byte ratio (1+4/hd)/2 sits at production-like
+# 0.53x (the smoke configs' hd=16 would understate capacity at 0.625x)
+_SCALE = dict(head_dim=64)
+
+
+def _build(smoke: bool = True):
+    cfg = registry.get_config("starcoder2-3b", smoke=smoke).scaled(**_SCALE)
+    model = registry.build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(0), jnp.float32)
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------- load ----
+def run_load(model, params, codec: str, rate_rps: float, n_requests: int,
+             prompt_len: int = 6, max_new: int = 8, batch_slots: int = 8,
+             max_len: int = 64, seed: int = 0) -> dict:
+    """One Poisson-arrival run at ``rate_rps``; returns the latency/
+    throughput record for this codec."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n_requests))
+    prompts = [[int(t) for t in rng.integers(1, 200, size=prompt_len)]
+               for _ in range(n_requests)]
+    eng = ServingEngine(model, params, EngineConfig(
+        batch_slots=batch_slots, max_len=max_len, codec=codec))
+    # warmup: compile prefill + decode before the clock starts, so the
+    # latency percentiles measure steady-state serving, not jit time
+    eng.submit(Request(uid=-1, prompt=[1] * prompt_len, max_new_tokens=2))
+    eng.run_until_drained()
+    queue = list(zip(arrivals, range(n_requests)))
+    reqs: dict[int, Request] = {}
+    done_at: dict[int, float] = {}
+    occ: list[float] = []
+    t0 = time.time()
+    guard = 0
+    while len(done_at) < n_requests and guard < 100_000:
+        guard += 1
+        now = time.time() - t0
+        while queue and queue[0][0] <= now:
+            at, uid = queue.pop(0)
+            r = Request(uid=uid, prompt=prompts[uid], max_new_tokens=max_new)
+            eng.submit(r)
+            reqs[uid] = r
+        live = eng.tick()
+        if eng.paged:
+            occ.append(eng.pool.occupancy())
+        else:
+            occ.append(live / batch_slots)
+        now = time.time() - t0
+        for uid, r in reqs.items():
+            if r.done and uid not in done_at:
+                done_at[uid] = now
+        if not live and not eng.pending and queue:
+            # idle ahead of the next arrival: sleep instead of spinning
+            time.sleep(max(0.0, min(queue[0][0] - now, 0.05)))
+    wall = time.time() - t0
+    lat = np.array([done_at[u] - arrivals[u] for u in sorted(done_at)])
+    toks = sum(len(r.out_tokens) for r in reqs.values())
+    return {
+        "codec": codec,
+        "rate_rps": float(rate_rps),
+        "n_requests": int(n_requests),
+        "completed": int(len(done_at)),
+        "p50_s": float(np.percentile(lat, 50)) if lat.size else -1.0,
+        "p99_s": float(np.percentile(lat, 99)) if lat.size else -1.0,
+        "tokens_per_s": float(toks / wall) if wall > 0 else 0.0,
+        "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        "ticks": int(eng.ticks),
+    }
+
+
+def load_sweep(model, params, rates, n_requests: int, seed: int = 0,
+               **kw) -> list[dict]:
+    rows = []
+    for codec in ("none", "blockfloat8"):
+        for rate in rates:
+            rows.append(run_load(model, params, codec, rate, n_requests,
+                                 seed=seed, **kw))
+    return rows
+
+
+# ------------------------------------------------- equal-bytes capacity ----
+def equal_bytes_concurrency(model, params, codec_pages: int = 32,
+                            n_tokens: int = 64, page_size: int = 16,
+                            batch_slots: int = 24) -> dict:
+    """Fix a pool byte budget (= ``codec_pages`` bf16 pages), build both
+    pools at that budget, and measure concurrent admitted requests of
+    ``n_tokens`` each — analytically and by actually admitting until the
+    pool defers."""
+    probe = PagePool(model, L.KVCodecConfig("none"), batch_slots, n_tokens,
+                     page_size)
+    pool_bytes = probe.page_nbytes * codec_pages
+    out: dict = {"pool_bytes": int(pool_bytes), "n_tokens": int(n_tokens)}
+    admitted: dict[str, int] = {}
+    for codec in ("none", "blockfloat8"):
+        pool = PagePool(model, L.KVCodecConfig(codec), batch_slots, n_tokens,
+                        page_size, pool_bytes=pool_bytes)
+        out[f"{codec}_capacity_requests"] = pool.capacity_requests(n_tokens)
+        prompt_len = 4
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=batch_slots, max_len=n_tokens, codec=codec,
+            paged=True, page_size=page_size, pool_bytes=pool_bytes))
+        for uid in range(2 * batch_slots):  # oversubscribe past capacity
+            eng.submit(Request(uid=uid, prompt=[1 + uid % 7] * prompt_len,
+                               max_new_tokens=n_tokens - prompt_len))
+        eng.tick()
+        admitted[codec] = len(eng._live())
+        out[f"{codec}_admitted"] = admitted[codec]
+    out["admitted_ratio_x"] = (admitted["blockfloat8"] / admitted["none"]
+                               if admitted["none"] else 0.0)
+    return out
+
+
+# ------------------------------------------------------------- section ----
+def bench_section(smoke: bool = True) -> dict:
+    """The ``serving`` section of BENCH_throughput*.json."""
+    cfg, model, params = _build(smoke=True)  # serving bench always smoke-size
+    rates = (8.0,) if smoke else (2.0, 8.0, 16.0)
+    n_requests = 10 if smoke else 32
+    return {
+        "arch": cfg.name,
+        "load": load_sweep(model, params, rates, n_requests),
+        "equal_bytes": equal_bytes_concurrency(model, params),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    section = bench_section(smoke=args.smoke)
+    print("codec,rate_rps,completed,p50_s,p99_s,tokens_per_s,occupancy_mean")
+    for r in section["load"]:
+        print(f"{r['codec']},{r['rate_rps']},{r['completed']},"
+              f"{r['p50_s']:.4f},{r['p99_s']:.4f},{r['tokens_per_s']:.1f},"
+              f"{r['occupancy_mean']:.3f}")
+    eb = section["equal_bytes"]
+    print(f"equal-bytes pool ({eb['pool_bytes']} B, {eb['n_tokens']} tok/req): "
+          f"none={eb['none_admitted']} blockfloat8={eb['blockfloat8_admitted']} "
+          f"ratio={eb['admitted_ratio_x']:.2f}x")
+    ok = eb["admitted_ratio_x"] >= 1.8
+    print("capacity gate (>=1.8x):", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,12 +44,17 @@ def _kvc_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
     scale = q.shape[-1] ** -0.5
     logits = jnp.einsum("hd,chd->hc", q.astype(jnp.float32), k) * scale
     pos = s_idx * SEQ_CHUNK + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
-    logits = jnp.where(pos <= len_ref[0, 0], logits, -1e30)
+    mask = pos <= len_ref[0, 0]
+    logits = jnp.where(mask, logits, -1e30)
 
     m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
     m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(logits - m_new)
+    # the mask multiply is a bitwise no-op for live lanes (exp of -1e30
+    # minus a real max underflows to exactly 0) but forces a fully-masked
+    # lane (index -1 = free slot) to p = 0 everywhere -> output exactly 0,
+    # independent of whatever the recycled cache rows hold
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
     l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
     acc_new = acc_prev * alpha + jnp.einsum("hc,chd->hd", p, v)
     m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
@@ -64,19 +69,22 @@ def kvc_decode_attention(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
                          v_codes: jax.Array, v_scale: jax.Array,
                          index: jax.Array, interpret: bool = True) -> jax.Array:
     """q: (B, H, D); codes: (B, S, H, D) int8; scales: (B, S, H) f32;
-    index: () current position (attends to cache[0..index]). GQA repeat is
-    done by the caller (ops.py). Returns (B, H, D) in q.dtype."""
+    index: () shared position or (B,) per-slot positions — each lane b
+    attends to cache[0..index[b]] (continuous batching admits requests at
+    any tick, so lanes sit at different positions; a lane with index -1
+    masks everything). GQA repeat is done by the caller (ops.py). Returns
+    (B, H, D) in q.dtype."""
     b, h, d = q.shape
     s = k_codes.shape[1]
     assert s % SEQ_CHUNK == 0, "pad cache length to SEQ_CHUNK (ops.py)"
     grid = (b, s // SEQ_CHUNK)
-    idx = jnp.broadcast_to(index.astype(jnp.int32), (1, 1))
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1, 1), (b, 1))
     return pl.pallas_call(
         _kvc_kernel,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((1, SEQ_CHUNK, h, d), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, SEQ_CHUNK, h), lambda i, j: (i, j, 0)),

@@ -143,7 +143,9 @@ def zfp_decompress_kernel(c: zfp_core.ZFPCompressed, path: str = "auto") -> jax.
 
 def kvc_attention(q: jax.Array, k_codes, k_scale, v_codes, v_scale, index):
     """Fused dequant+attention decode step; pads cache to SEQ_CHUNK.
-    q: (B, H, D) — repeat GQA heads before calling."""
+    q: (B, H, D) — repeat GQA heads before calling. ``index`` is a scalar
+    shared position or a (B,) per-slot position vector (continuous
+    batching: each lane attends to its own cache[0..index[b]])."""
     s = k_codes.shape[1]
     pad = (-s) % _kvc.SEQ_CHUNK
     if pad:

@@ -67,13 +67,17 @@ def zfp3d_transform_ref(blocks: jax.Array):
 
 
 def kvc_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, index):
-    """Dequantize-then-attend in plain jnp (the unfused two-pass baseline)."""
+    """Dequantize-then-attend in plain jnp (the unfused two-pass baseline).
+    ``index``: () shared position or (B,) per-slot positions."""
     k = k_codes.astype(jnp.float32) * k_scale[..., None]  # (B,S,H,D)
     v = v_codes.astype(jnp.float32) * v_scale[..., None]
     scale = q.shape[-1] ** -0.5
     logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
     s = k.shape[1]
-    mask = jnp.arange(s)[None, None, :] <= index
+    idx = jnp.asarray(index, jnp.int32).reshape(-1, 1, 1)  # (B|1, 1, 1)
+    mask = jnp.arange(s)[None, None, :] <= idx
     logits = jnp.where(mask, logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked lanes (index -1 = free slot) output exactly 0 instead of
+    # a uniform average over stale cache rows — mirrors the fused kernel
+    p = jax.nn.softmax(logits, axis=-1) * mask
     return jnp.einsum("bhs,bshd->bhd", p, v).astype(q.dtype)

@@ -1,4 +1,8 @@
-"""Serving launcher: batched requests against any registered arch.
+"""Serving launcher: continuous-batched requests against any registered arch.
+
+Slots admit work through a saxml-style batch-size ladder; each slot decodes
+at its own position, prompts prefill in one chunked call, and the KV cache
+can run as a paged compressed pool (``--pool-pages`` / ``--pool-bytes``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
         --requests 8 --max-new 16 --codec blockfloat8
@@ -26,6 +30,18 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--codec", choices=["none", "blockfloat8"], default="none")
+    ap.add_argument("--paged", choices=["auto", "on", "off"], default="auto",
+                    help="paged KV pool (auto: on for models that support it)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool size in pages (default: slots * max_len)")
+    ap.add_argument("--pool-bytes", type=int, default=None,
+                    help="KV pool size in bytes (overrides --pool-pages)")
+    ap.add_argument("--ladder", type=str, default="",
+                    help="comma-separated admission batch-size ladder, e.g. 1,2,4")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 enables seeded sampling instead of greedy")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = registry.get_config(args.arch, smoke=args.smoke)
@@ -33,13 +49,25 @@ def main(argv=None) -> int:
     params = init_params(model.specs(), jax.random.key(0), jnp.float32)
     print(f"{cfg.name}: {param_count(model.specs())/1e6:.1f}M params, codec={args.codec}")
 
+    ladder = tuple(int(x) for x in args.ladder.split(",") if x) if args.ladder else ()
     eng = ServingEngine(model, params, EngineConfig(
-        batch_slots=args.slots, max_len=args.max_len, codec=args.codec))
+        batch_slots=args.slots, max_len=args.max_len, codec=args.codec,
+        paged={"auto": "auto", "on": True, "off": False}[args.paged],
+        page_size=args.page_size, pool_pages=args.pool_pages,
+        pool_bytes=args.pool_bytes, ladder=ladder,
+        greedy=args.temperature <= 0,
+        temperature=args.temperature if args.temperature > 0 else 1.0,
+        sample_seed=args.seed))
+    if eng.paged:
+        print(f"paged KV: {eng.pool.n_pages - 1} pages x {eng.pool.page_size} tokens "
+              f"({eng.pool.nbytes()/1e6:.2f} MB pool)")
     for uid in range(args.requests):
         eng.submit(Request(uid=uid, prompt=[1 + uid % 7, 2, 3], max_new_tokens=args.max_new))
     t0 = time.time()
     done = eng.run_until_drained()
     dt = time.time() - t0
+    if not done.drained:
+        print("WARNING: drain exhausted max_ticks with requests still live")
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s); "
           f"KV cache {eng.cache_nbytes()/1e6:.2f} MB")

@@ -176,8 +176,12 @@ class EncDecLM:
         c = self.cfg
         dt = jnp.dtype(c.dtype)
         x = L.embed(params["embed"], token[:, None], dt)
-        pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, 0)
-        x = x + pos_emb.astype(dt)[None]
+        if index.ndim == 1:  # (B,) per-slot positions (continuous batching)
+            pos_emb = params["dec_pos"][jnp.clip(index, 0)][:, None]  # (B,1,d)
+            x = x + pos_emb.astype(dt)
+        else:
+            pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, 0)
+            x = x + pos_emb.astype(dt)[None]
 
         def body(carry, inp):
             lp, layer_cache = inp

@@ -20,6 +20,12 @@ FLASH_THRESHOLD: int | None = None  # None => per-config default
 WKV_CHUNK: int | None = None
 SSD_CHUNK: int | None = None
 
+# Serving: route blockfloat8 decode attention through the fused
+# dequant+attend Pallas kernel (kernels.kvc_attention) instead of
+# dequantize-then-attend. Trace-time flag — the serving engine toggles it
+# around tracing its jitted decode step (EngineConfig.attention).
+KVC_FUSED: bool = False
+
 
 def costing(enabled: bool, seq_len: int = 0) -> None:
     """Toggle costing mode (see module docstring)."""

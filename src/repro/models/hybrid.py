@@ -261,15 +261,19 @@ class HymbaLM:
                 head_dim=c.hd, rope_theta=c.rope_theta, window=None,
             )
             acache = {k[5:]: v for k, v in layer_cache.items() if k.startswith("attn_")}
-            pos = index[None] if index.ndim == 0 else index  # (1,) batch-free
+            # index: () homogeneous batch or (B,) per-slot positions (the
+            # serving tier admits requests at any tick)
+            pos = index[:, None] if index.ndim == 1 else (
+                index[None] if index.ndim == 0 else index)  # (B,1) | (1,)
             q, k_new, v_new = L._qkv(lp["attn"], ac, h, pos)
             acache = L.cache_update(acache, codec, k_new, v_new, index)
             kk, vv = L.cache_read(acache, codec, h.dtype)
             n_rep = ac.n_heads // ac.n_kv_heads
             kk, vv = L._repeat_kv(kk, n_rep), L._repeat_kv(vv, n_rep)
             kpos = jnp.arange(kk.shape[1], dtype=jnp.int32)[None, :]
+            idx = index.reshape(-1, 1) if index.ndim == 1 else index  # (B,1)|()
             logits = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * ac.head_dim**-0.5
-            mask = (kpos <= index) & (kpos > index - window)
+            mask = (kpos <= idx) & (kpos > idx - window)
             logits = jnp.where(mask[:, None, None, :], logits, -1e30)
             probs = jax.nn.softmax(logits, axis=-1).astype(h.dtype)
             a_out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)

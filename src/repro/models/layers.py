@@ -50,12 +50,22 @@ def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
-    """Rotary embedding. x: (B, S, H, D); positions: (S,) — positions are
-    deliberately batch-free so masks/rotations never carry a batch dim
-    (a batch-shaped mask makes GSPMD replicate attention logits)."""
+    """Rotary embedding. x: (B, S, H, D); positions: (S,) batch-free, or
+    (B, S) per-slot (serving: every slot sits at its own position, so the
+    rotation must be per-lane). Training keeps the batch-free form — a
+    batch-shaped mask makes GSPMD replicate attention logits."""
     hd = x.shape[-1]
     half = hd // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:  # (B, S) per-slot positions
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+        cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, half)
+        sin = jnp.sin(ang)[:, :, None, :]
+        x1, x2 = x[..., :half], x[..., half:]
+        dt = x.dtype
+        return jnp.concatenate(
+            [(x1 * cos - x2 * sin).astype(dt), (x2 * cos + x1 * sin).astype(dt)],
+            axis=-1)
     ang = positions[:, None].astype(jnp.float32) * freqs  # (S, half)
     cos = jnp.cos(ang)[None, :, None, :]  # (1, S, 1, half)
     sin = jnp.sin(ang)[None, :, None, :]
@@ -212,6 +222,36 @@ def attention(p: dict, c: AttnConfig, x: jax.Array, positions: jax.Array,
 # -------------------------------------------------- KV cache (+ codec) ----
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """Cache address for paged serving: per-slot write positions plus the
+    slot -> page mapping. Passed through ``decode_step`` in place of the
+    scalar ``index`` — models forward it opaquely to the cache layer.
+
+    ``pos``: (B,) int32, next write position per slot; -1 marks a free lane
+    (its writes are dropped and its attention mask is empty).
+    ``page_table``: (B, max_pages) int32 page ids into the pool's leading
+    axis. Page 0 is the reserved zero page: unmapped table entries point at
+    it, so gathers through a free lane read exact zeros.
+    """
+
+    pos: jax.Array
+    page_table: jax.Array
+
+    def tree_flatten(self):
+        return (self.pos, self.page_table), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+
+def _is_vector_index(index) -> bool:
+    return isinstance(index, PagedKV) or (
+        hasattr(index, "ndim") and index.ndim == 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class KVCodecConfig:
     """Fixed-rate block-float KV compression (the paper's cuZFP fixed-rate
@@ -254,9 +294,67 @@ def _bf8_decode(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+_FAR = jnp.int32(1 << 30)  # out-of-bounds scatter target => write dropped
+
+
+def _scatter_tokens(dest: jax.Array, val: jax.Array, index,
+                    wpos: jax.Array) -> jax.Array:
+    """Scatter per-slot token rows into a cache leaf.
+
+    ``val``: (B, T, ...) new values; ``wpos``: (B, T) global write positions
+    (entries < 0 or past capacity are dropped — that is how masked prompt
+    padding and free lanes are suppressed). Dense leaves are (B, S, ...);
+    paged leaves are pools (n_pages, page, ...) addressed through
+    ``index.page_table``.
+    """
+    b, t = wpos.shape
+    wpos = jnp.where(wpos >= 0, wpos, _FAR)
+    if isinstance(index, PagedKV):
+        n_pages, page = dest.shape[0], dest.shape[1]
+        max_pages = index.page_table.shape[1]
+        pi = jnp.clip(wpos // page, 0, max_pages - 1)
+        pages = jnp.take_along_axis(index.page_table, pi, axis=1)  # (B, T)
+        pages = jnp.where(wpos < page * max_pages, pages, n_pages)  # OOB drop
+        off = jnp.clip(wpos % page, 0, page - 1)
+        return dest.at[pages, off].set(val, mode="drop")
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return dest.at[jnp.broadcast_to(rows, (b, t)), wpos].set(val, mode="drop")
+
+
+def cache_write(cache: dict, codec: KVCodecConfig, k_new: jax.Array,
+                v_new: jax.Array, index, wpos: jax.Array) -> dict:
+    """Per-slot cache write: K/V (B, T, h, d) land at per-lane positions
+    ``wpos`` (B, T); negative positions are dropped. ``index`` selects the
+    layout (``PagedKV`` pool vs dense (B, S) lanes)."""
+    if codec.mode == "blockfloat8":
+        kc, ks = _bf8_encode(k_new)
+        vc, vs = _bf8_encode(v_new)
+        return {
+            "k_codes": _scatter_tokens(cache["k_codes"], kc, index, wpos),
+            "v_codes": _scatter_tokens(cache["v_codes"], vc, index, wpos),
+            "k_scale": _scatter_tokens(cache["k_scale"], ks, index, wpos),
+            "v_scale": _scatter_tokens(cache["v_scale"], vs, index, wpos),
+        }
+    return {
+        "k": _scatter_tokens(cache["k"], k_new.astype(cache["k"].dtype), index, wpos),
+        "v": _scatter_tokens(cache["v"], v_new.astype(cache["v"].dtype), index, wpos),
+    }
+
+
 def cache_update(cache: dict, codec: KVCodecConfig, k_new: jax.Array, v_new: jax.Array,
-                 index: jax.Array) -> dict:
-    """Write new K/V (b, t, h, d) at position ``index`` (decode: t == 1)."""
+                 index) -> dict:
+    """Write new K/V (b, t, h, d) at position ``index`` (decode: t == 1).
+
+    ``index`` may be a scalar (homogeneous batch — every lane writes at the
+    same position), a (B,) vector (per-slot positions; -1 lanes are
+    dropped), or a :class:`PagedKV` (per-slot positions into a page pool).
+    """
+    if _is_vector_index(index):
+        pos = index.pos if isinstance(index, PagedKV) else index
+        t = k_new.shape[1]
+        wpos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        wpos = jnp.where(pos[:, None] >= 0, wpos, -1)
+        return cache_write(cache, codec, k_new, v_new, index, wpos)
     if codec.mode == "blockfloat8":
         kc, ks = _bf8_encode(k_new)
         vc, vs = _bf8_encode(v_new)
@@ -272,7 +370,36 @@ def cache_update(cache: dict, codec: KVCodecConfig, k_new: jax.Array, v_new: jax
     }
 
 
-def cache_read(cache: dict, codec: KVCodecConfig, dtype=jnp.bfloat16):
+def _gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(n_pages, page, ...) pool + (B, max_pages) table -> (B, S, ...) view
+    where S = max_pages * page. Unmapped entries point at the zero page."""
+    b, max_pages = page_table.shape
+    page = pool.shape[1]
+    g = pool[page_table]  # (B, max_pages, page, ...)
+    return g.reshape((b, max_pages * page) + pool.shape[2:])
+
+
+def cache_codes(cache: dict, index=None):
+    """Raw compressed view (k_codes, k_scale, v_codes, v_scale) — the fused
+    kvc_attention kernel consumes codes directly, so the HBM traffic is the
+    compressed bytes. Paged caches are stitched through the page table."""
+    if isinstance(index, PagedKV):
+        t = index.page_table
+        return (_gather_pages(cache["k_codes"], t), _gather_pages(cache["k_scale"], t),
+                _gather_pages(cache["v_codes"], t), _gather_pages(cache["v_scale"], t))
+    return cache["k_codes"], cache["k_scale"], cache["v_codes"], cache["v_scale"]
+
+
+def cache_read(cache: dict, codec: KVCodecConfig, dtype=jnp.bfloat16, index=None):
+    if isinstance(index, PagedKV):
+        t = index.page_table
+        if codec.mode == "blockfloat8":
+            k = _bf8_decode(_gather_pages(cache["k_codes"], t),
+                            _gather_pages(cache["k_scale"], t), dtype)
+            v = _bf8_decode(_gather_pages(cache["v_codes"], t),
+                            _gather_pages(cache["v_scale"], t), dtype)
+            return k, v
+        return _gather_pages(cache["k"], t), _gather_pages(cache["v"], t)
     if codec.mode == "blockfloat8":
         k = _bf8_decode(cache["k_codes"], cache["k_scale"], dtype)
         v = _bf8_decode(cache["v_codes"], cache["v_scale"], dtype)
@@ -280,9 +407,70 @@ def cache_read(cache: dict, codec: KVCodecConfig, dtype=jnp.bfloat16):
     return cache["k"], cache["v"]
 
 
+def _attend_cached(p: dict, c: AttnConfig, x: jax.Array, cache: dict,
+                   codec: KVCodecConfig, index, length: jax.Array
+                   ) -> tuple[jax.Array, dict]:
+    """Per-slot attention of x (B, T, d) against the cache.
+
+    Each lane b writes its tokens at positions ``start[b] .. start[b]+T-1``
+    (only the first ``length[b]`` are kept — prompt padding and free lanes
+    are dropped) and attends causally at its own position. This is the one
+    code path behind both chunked prefill (T = prompt chunk) and per-slot
+    decode (T = 1), for dense and paged caches alike.
+    """
+    start = index.pos if isinstance(index, PagedKV) else index  # (B,)
+    b, t = x.shape[0], x.shape[1]
+    tpos = jnp.arange(t, dtype=jnp.int32)
+    gpos = start[:, None] + tpos[None, :]  # (B, T) global positions
+    valid = (tpos[None, :] < length[:, None]) & (start[:, None] >= 0)
+    q, k_new, v_new = _qkv(p, c, x, gpos)
+    cache = cache_write(cache, codec, k_new, v_new, index,
+                        jnp.where(valid, gpos, -1))
+    n_rep = c.n_heads // c.n_kv_heads
+    if (t == 1 and codec.mode == "blockfloat8" and flags.KVC_FUSED
+            and c.window is None):
+        # fused dequant+attend: KV HBM traffic is the compressed bytes
+        from repro.kernels import ops as _kops
+
+        kc, ks, vc, vs = cache_codes(cache, index)
+        kc, vc = _repeat_kv(kc, n_rep), _repeat_kv(vc, n_rep)
+        ks = _repeat_kv(ks[..., None], n_rep)[..., 0]
+        vs = _repeat_kv(vs[..., None], n_rep)[..., 0]
+        out = _kops.kvc_attention(q[:, 0], kc, ks, vc, vs, start)[:, None]
+    else:
+        k, v = cache_read(cache, codec, x.dtype, index)
+        k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        mask = k_pos[None, None, :] <= gpos[:, :, None]  # (B, T, S) causal
+        if c.window is not None:
+            mask &= k_pos[None, None, :] > gpos[:, :, None] - c.window
+        scale = c.head_dim**-0.5
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+def prefill_attention(p: dict, c: AttnConfig, x: jax.Array, cache: dict,
+                      codec: KVCodecConfig, index, length: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+    """Chunked-prefill attention: x (B, T, d) holds each lane's prompt chunk
+    (padded to T; ``length`` (B,) = valid tokens, 0 = inactive lane)."""
+    return _attend_cached(p, c, x, cache, codec, index, length)
+
+
 def decode_attention(p: dict, c: AttnConfig, x: jax.Array, cache: dict,
-                     codec: KVCodecConfig, index: jax.Array) -> tuple[jax.Array, dict]:
-    """One-token attention against the cache. x: (b, 1, d)."""
+                     codec: KVCodecConfig, index) -> tuple[jax.Array, dict]:
+    """One-token attention against the cache. x: (b, 1, d). ``index`` may be
+    a scalar (homogeneous batch), a (B,) per-slot position vector, or a
+    :class:`PagedKV` (per-slot positions + page table) — the serving tier
+    admits requests at any tick, so every lane carries its own position."""
+    if _is_vector_index(index):
+        pos = index.pos if isinstance(index, PagedKV) else index
+        length = (pos >= 0).astype(jnp.int32)  # free lanes write nothing
+        return _attend_cached(p, c, x, cache, codec, index, length)
     positions = index[None] if index.ndim == 0 else index  # (1,)
     q, k_new, v_new = _qkv(p, c, x, positions)
     cache = cache_update(cache, codec, k_new, v_new, index)

@@ -169,3 +169,27 @@ class MoELM(DenseLM):
         x = self.norm(params["final_norm"], x)
         table = params["embed"] if c.tie_embeddings else params["unembed"]
         return L.unembed(table, x)[:, 0, :], new_cache
+
+    def prefill(self, params: dict, cache: dict, tokens: jax.Array,
+                index, length: jax.Array, codec: L.KVCodecConfig):
+        """Chunked prompt prefill (see DenseLM.prefill) with the MoE MLP."""
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], tokens, dt)
+
+        def body(carry, inp):
+            layer_params, layer_cache = inp
+            x = carry
+            h = self.norm(layer_params["attn_norm"], x)
+            a, layer_cache = L.prefill_attention(
+                layer_params["attn"], c.attn(), h, layer_cache, codec, index, length)
+            x = x + a
+            y, _ = moe_apply(layer_params["moe"], c, self.norm(layer_params["mlp_norm"], x))
+            return x + y, layer_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = self.norm(params["final_norm"], x)
+        last = jnp.clip(length - 1, 0, tokens.shape[1] - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        return L.unembed(table, xl)[:, 0, :], new_cache

@@ -32,6 +32,10 @@ def stack_specs(n: int, tree: Any) -> Any:
 
 
 class DenseLM:
+    # decode routes every KV access through layers.decode_attention, so the
+    # serving tier can swap the dense (B, S) cache for a paged pool
+    supports_paged_kv = True
+
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.norm = L.rmsnorm if cfg.norm_kind == "rms" else L.layernorm
@@ -126,6 +130,35 @@ class DenseLM:
         x = self.norm(params["final_norm"], x)
         table = params["embed"] if c.tie_embeddings else params["unembed"]
         return L.unembed(table, x)[:, 0, :], new_cache
+
+    def prefill(self, params: dict, cache: dict, tokens: jax.Array,
+                index, length: jax.Array, codec: L.KVCodecConfig
+                ) -> tuple[jax.Array, dict]:
+        """Chunked prompt prefill: tokens (B, T) land in the cache in ONE
+        call instead of T decode ticks. ``index`` carries per-lane start
+        positions ((B,) vector or PagedKV); ``length`` (B,) = valid tokens
+        per lane (0 = lane not being prefilled; its writes are dropped).
+        Returns logits at each lane's last valid token (B, vocab)."""
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        x = L.embed(params["embed"], tokens, dt)
+
+        def body(carry, inp):
+            layer_params, layer_cache = inp
+            x = carry
+            h = self.norm(layer_params["attn_norm"], x)
+            a, layer_cache = L.prefill_attention(
+                layer_params["attn"], c.attn(), h, layer_cache, codec, index, length)
+            x = x + a
+            x = x + L.mlp(layer_params["mlp"], self.norm(layer_params["mlp_norm"], x), c.mlp_kind)
+            return x, layer_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = self.norm(params["final_norm"], x)
+        last = jnp.clip(length - 1, 0, tokens.shape[1] - 1)  # (B,)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        table = params["embed"] if c.tie_embeddings else params["unembed"]
+        return L.unembed(table, xl)[:, 0, :], new_cache
 
 
 def lm_loss(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4) -> jax.Array:

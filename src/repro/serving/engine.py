@@ -1,33 +1,51 @@
-"""Batched serving engine with compressed KV cache.
+"""Continuous-batching serving engine with a paged, compressed KV cache.
 
-Continuous-batching style slot manager: requests occupy batch slots, every
-engine tick runs one fused decode step over all live slots, finished
-requests free their slot. The KV cache can run:
+Requests occupy batch slots; every engine tick runs one fused decode step
+over all live slots. Unlike the first-cut engine (which advanced every slot
+with a single shared position counter and never cleared a freed slot's KV —
+a recycled slot could attend over its previous occupant's keys/values),
+each slot now carries its own write index:
 
-  * ``none``        — bf16 (baseline),
-  * ``blockfloat8`` — fixed-rate int8 block-float (the paper's fixed-rate
-    mode on inference state; 8.25 bits/value). Decode attention is HBM
-    bound, so at long context this is ~2x step-time headroom and 2x cache
-    capacity (doubles the batch a chip can host) — measured in
-    benchmarks/throughput.py and tests below via exact byte accounting.
+  * ``pos[i]`` is slot *i*'s next cache write position (-1 = free lane), fed
+    to ``decode_step`` as a ``(B,)`` vector — or as a ``layers.PagedKV``
+    pytree when the cache is paged — so lanes at different depths decode
+    correctly in one step.
+  * Prompts are prefilled in ONE chunked call (``model.prefill``) at
+    admission instead of token-by-token ticks; models without a ``prefill``
+    method fall back to per-slot token-by-token feeding (still leak-free).
+  * On completion the slot's cache rows (or its pages) are zeroed on-device
+    before the slot can be recycled — isolation holds by construction, not
+    by masking alone.
 
-The engine is deliberately model-agnostic: anything with ``decode_step`` /
-``init_cache`` (all 10 archs) serves through it.
+The KV cache can run ``none`` (bf16 baseline) or ``blockfloat8`` (the
+paper's fixed-rate int8 block-float mode on inference state; 8.25
+bits/value). With ``paged=True`` (auto-on for attention models) the cache
+is a page pool (`serving/kv_pages.py`): admitted work is bounded by pool
+bytes, not ``batch_slots``, and a compressed pool admits ~2x the concurrent
+requests of bf16 at equal bytes. Admission walks a saxml-style batch-size
+ladder (`serving/admission.py`).
+
+Anything with ``decode_step`` / ``init_cache`` serves through the engine;
+``model.supports_paged_kv`` / ``model.prefill`` unlock the paged and
+chunked-prefill fast paths (DenseLM and MoELM families).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import flags
 from repro.models import layers as L
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.kv_pages import PagePool
 
 
 @dataclasses.dataclass
@@ -50,6 +68,49 @@ class EngineConfig:
     codec: str = "none"  # none | blockfloat8
     eos_token: Optional[int] = None
     greedy: bool = True
+    # sampling (greedy=False): logits / temperature -> categorical, seeded
+    temperature: float = 1.0
+    sample_seed: int = 0
+    # paged KV pool: "auto" = on iff the model supports it
+    paged: Union[bool, str] = "auto"
+    page_size: int = 16
+    pool_pages: Optional[int] = None  # pages in the pool (default: slots*max)
+    pool_bytes: Optional[int] = None  # or size the pool by bytes
+    prefill_chunk: int = 16  # prompts pad to a multiple -> bounded recompiles
+    attention: str = "auto"  # auto | fused | xla (fused = Pallas kvc kernel)
+    # saxml-style admission: sorted batch-size ladder + max-live-batches
+    ladder: tuple[int, ...] = ()
+    max_live_batches: int = 1
+
+    def __post_init__(self):
+        if self.codec not in ("none", "blockfloat8"):
+            raise ValueError(f"unknown codec {self.codec!r}")
+        if self.batch_slots <= 0:
+            raise ValueError(f"batch_slots must be positive: {self.batch_slots}")
+        if self.max_len <= 1:
+            raise ValueError(f"max_len must be > 1: {self.max_len}")
+        if not self.greedy and not self.temperature > 0:
+            raise ValueError(
+                f"greedy=False requires temperature > 0, got {self.temperature}")
+        if self.attention not in ("auto", "fused", "xla"):
+            raise ValueError(f"unknown attention mode {self.attention!r}")
+        if self.attention == "fused" and self.codec != "blockfloat8":
+            raise ValueError("attention='fused' requires codec='blockfloat8' "
+                             "(the kernel dequantizes int8 block-float)")
+        if self.paged not in (True, False, "auto"):
+            raise ValueError(f"paged must be True/False/'auto': {self.paged!r}")
+        if self.page_size <= 0 or self.prefill_chunk <= 0:
+            raise ValueError("page_size and prefill_chunk must be positive")
+
+
+class DrainResult(list):
+    """All requests submitted before the drain, in submission order.
+    ``drained`` is False when ``max_ticks`` ran out with work still live —
+    callers must check it instead of silently losing unfinished requests."""
+
+    def __init__(self, requests, drained: bool):
+        super().__init__(requests)
+        self.drained = drained
 
 
 class ServingEngine:
@@ -58,29 +119,85 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.codec = L.KVCodecConfig(cfg.codec)
-        self.cache = model.init_cache(cfg.batch_slots, cfg.max_len, self.codec)
-        self.pos = np.zeros(cfg.batch_slots, np.int32)
+        paged_ok = bool(getattr(model, "supports_paged_kv", False))
+        self.paged = paged_ok if cfg.paged == "auto" else bool(cfg.paged)
+        if self.paged and not paged_ok:
+            raise ValueError(
+                f"{type(model).__name__} does not support paged KV "
+                "(no supports_paged_kv); use paged=False or 'auto'")
+        if self.paged:
+            self.pool: Optional[PagePool] = PagePool(
+                model, self.codec, cfg.batch_slots, cfg.max_len,
+                page_size=cfg.page_size, n_pages=cfg.pool_pages,
+                pool_bytes=cfg.pool_bytes)
+            self.cache = self.pool.cache
+        else:
+            self.pool = None
+            self.cache = model.init_cache(cfg.batch_slots, cfg.max_len, self.codec)
+        self.pos = np.full(cfg.batch_slots, -1, np.int32)  # -1 = free lane
         self.slots: list[Optional[Request]] = [None] * cfg.batch_slots
         self.pending: list[Request] = []
-        self._step = jax.jit(
-            lambda p, c, t, i: model.decode_step(p, c, t, i, self.codec))
+        self.admission = AdmissionController(
+            AdmissionConfig(tuple(cfg.ladder), cfg.max_live_batches),
+            cfg.batch_slots)
+        # fused dequant-attend only pays off where Pallas compiles natively
+        self._fused = cfg.codec == "blockfloat8" and (
+            cfg.attention == "fused"
+            or (cfg.attention == "auto" and jax.default_backend() == "tpu"))
+        self._key = jax.random.key(cfg.sample_seed)
         self.ticks = 0
+
+        codec, fused = self.codec, self._fused
+
+        def _with_fused(fn):
+            # flags.KVC_FUSED is read at trace time inside decode_attention;
+            # toggle it only around tracing this engine's programs so the
+            # choice never leaks into other code in the process.
+            def wrapped(*a):
+                prev = flags.KVC_FUSED
+                flags.KVC_FUSED = fused
+                try:
+                    return fn(*a)
+                finally:
+                    flags.KVC_FUSED = prev
+            return wrapped
+
+        self._step = jax.jit(_with_fused(
+            lambda p, c, t, i: model.decode_step(p, c, t, i, codec)))
+        self._can_prefill = hasattr(model, "prefill")
+        if self._can_prefill:
+            self._prefill = jax.jit(_with_fused(
+                lambda p, c, t, i, n: model.prefill(p, c, t, i, n, codec)))
+        self._sample_jit = jax.jit(lambda key, logits: jax.random.categorical(
+            key, logits.astype(jnp.float32) / cfg.temperature, axis=-1))
+        # zero-on-free: every arch's cache leaves are (n_layers, batch, ...),
+        # and the paged pool's are (n_layers, n_pages, ...) — axis 1 is the
+        # recycled resource in both. Padding freed-page ids with 0 re-zeroes
+        # the reserved zero page, which is a no-op by its invariant.
+        self._zero_slot = jax.jit(
+            lambda c, i: jax.tree.map(lambda x: x.at[:, i].set(0), c))
+        self._zero_pages = jax.jit(
+            lambda c, ids: jax.tree.map(lambda x: x.at[:, ids].set(0), c))
         # process-global instruments (no-ops until repro.obs is enabled)
         self._h_request = obs_metrics.histogram("serving.request_s")
         self._h_tick = obs_metrics.histogram("serving.tick_s")
+        self._h_prefill = obs_metrics.histogram("serving.prefill_s")
         self._g_occupancy = obs_metrics.gauge("serving.batch_occupancy")
+        self._g_cache = obs_metrics.gauge("serving.cache_occupancy")
+        self._c_admitted = obs_metrics.counter("serving.admitted")
+        self._c_completed = obs_metrics.counter("serving.completed")
+        self._c_deferred = obs_metrics.counter("serving.admission_deferred")
 
     # -------------------------------------------------------- lifecycle --
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            req.prompt = [0]  # old engine fed token 0 for empty prompts
+        if len(req.prompt) > self.cfg.max_len - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit "
+                f"max_len={self.cfg.max_len} (needs at least one decode step)")
         req.submitted_t = time.time()
         self.pending.append(req)
-
-    def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.pending:
-                req = self.pending.pop(0)
-                self.slots[i] = req
-                self.pos[i] = 0
 
     def _live(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
@@ -89,55 +206,153 @@ class ServingEngine:
         return sum(np.dtype(x.dtype).itemsize * int(np.prod(x.shape))
                    for x in jax.tree.leaves(self.cache))
 
+    def _index_arg(self):
+        pos = jnp.asarray(self.pos)
+        if self.paged:
+            return L.PagedKV(pos, jnp.asarray(self.pool.page_table()))
+        return pos
+
+    # -------------------------------------------------------- admission --
+    def _admit(self) -> list[tuple[int, Request]]:
+        live = len(self._live())
+        quota = self.admission.admittable(live, len(self.pending))
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted: list[tuple[int, Request]] = []
+        while quota > 0 and free and self.pending:
+            req = self.pending[0]
+            # worst-case reservation: a request can never OOM mid-flight
+            cap = min(len(req.prompt) + req.max_new_tokens, self.cfg.max_len)
+            if self.paged and not self.pool.can_admit(cap):
+                self._c_deferred.inc()
+                break  # FIFO head-of-line: wait for pages to free up
+            self.pending.pop(0)
+            slot = free.pop(0)
+            if self.paged:
+                self.pool.allocate(slot, cap)
+            self.slots[slot] = req
+            self.pos[slot] = 0
+            admitted.append((slot, req))
+            quota -= 1
+        if admitted:
+            self._c_admitted.inc(len(admitted))
+            if self._can_prefill:
+                self._prefill_admitted(admitted)
+        return admitted
+
+    def _prefill_admitted(self, admitted: list[tuple[int, Request]]) -> None:
+        """One chunked prefill call writes every admitted prompt into the
+        cache and yields logits at each prompt's last token, from which the
+        first output token is sampled — replacing len(prompt) decode ticks.
+        Lanes not being prefilled pass length 0 / start -1: their writes are
+        dropped and their logits ignored, so live decoding lanes are
+        untouched."""
+        t0 = time.time()
+        chunk = self.cfg.prefill_chunk
+        longest = max(len(r.prompt) for _, r in admitted)
+        width = -(-longest // chunk) * chunk  # pad -> bounded recompiles
+        tokens = np.zeros((self.cfg.batch_slots, width), np.int32)
+        length = np.zeros(self.cfg.batch_slots, np.int32)
+        start = np.full(self.cfg.batch_slots, -1, np.int32)
+        for slot, req in admitted:
+            tokens[slot, : len(req.prompt)] = req.prompt
+            length[slot] = len(req.prompt)
+            start[slot] = 0
+        if self.paged:
+            index = L.PagedKV(jnp.asarray(start),
+                              jnp.asarray(self.pool.page_table()))
+        else:
+            index = jnp.asarray(start)
+        with obs_trace.span("serving.prefill", lanes=len(admitted), width=width):
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(tokens), index,
+                jnp.asarray(length))
+            nxt = self._sample(logits)
+        for slot, req in admitted:
+            self.pos[slot] = len(req.prompt)
+            self._emit(slot, req, int(nxt[slot]))
+        self._h_prefill.observe(time.time() - t0)
+
+    # --------------------------------------------------------- sampling --
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.cfg.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(self._sample_jit(sub, logits))
+
+    # ------------------------------------------------------- completion --
+    def _emit(self, slot: int, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        hit_eos = self.cfg.eos_token is not None and tok == self.cfg.eos_token
+        if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
+                or self.pos[slot] >= self.cfg.max_len - 1):
+            self._retire(slot, req)
+
+    def _retire(self, slot: int, req: Request) -> None:
+        """Free the slot and zero its cache state on-device BEFORE it can be
+        recycled — the isolation half of the PR-9 bugfix."""
+        req.done = True
+        self.slots[slot] = None
+        self.pos[slot] = -1
+        if self.paged:
+            ids = self.pool.free_slot(slot)
+            padded = np.zeros(self.pool.max_pages, np.int32)
+            padded[: len(ids)] = ids  # fixed width -> one compiled program
+            self.cache = self._zero_pages(self.cache, jnp.asarray(padded))
+        else:
+            self.cache = self._zero_slot(self.cache, jnp.int32(slot))
+        self._c_completed.inc()
+        if req.submitted_t is not None:
+            self._h_request.observe(time.time() - req.submitted_t)
+
     # ------------------------------------------------------------- tick --
     def tick(self) -> int:
-        """One engine step: feed each live slot its next token. Returns the
-        number of live requests. (All slots advance with a shared position
-        counter — homogeneous-phase batching; prompts are fed token by
-        token, which keeps the engine exactly the decode_step the dry-run
-        lowers.)"""
+        """One engine step: admit from the queue, then feed each live slot
+        its next token at its OWN position. Returns the number of live
+        requests (0 = idle tick — still counted and timed)."""
         t0 = time.time()
         self._admit()
         live = self._live()
         self._g_occupancy.set(len(live) / self.cfg.batch_slots)
+        if self.paged:
+            self._g_cache.set(self.pool.occupancy())
         if not live:
+            self.ticks += 1
+            self._h_tick.observe(time.time() - t0)
             return 0
         tokens = np.zeros(self.cfg.batch_slots, np.int32)
         for i in live:
             req = self.slots[i]
             p = self.pos[i]
-            if p < len(req.prompt):
+            if p < len(req.prompt):  # no-prefill fallback: feed prompt
                 tokens[i] = req.prompt[p]
             else:
                 tokens[i] = req.out_tokens[-1] if req.out_tokens else 0
-        index = int(self.pos[live[0]])  # homogeneous position
-        with obs_trace.span("serving.tick", live=len(live), index=index):
+        index = self._index_arg()
+        with obs_trace.span("serving.tick", live=len(live)):
             logits, self.cache = self._step(self.params, self.cache,
-                                            jnp.asarray(tokens),
-                                            jnp.int32(index))
-            nxt = (np.asarray(jnp.argmax(logits, axis=-1))
-                   if self.cfg.greedy else None)
+                                            jnp.asarray(tokens), index)
+            nxt = self._sample(logits)
         for i in live:
             req = self.slots[i]
             self.pos[i] += 1
             if self.pos[i] >= len(req.prompt):
-                tok = int(nxt[i])
-                req.out_tokens.append(tok)
-                hit_eos = self.cfg.eos_token is not None and tok == self.cfg.eos_token
-                if len(req.out_tokens) >= req.max_new_tokens or hit_eos or \
-                        self.pos[i] >= self.cfg.max_len - 1:
-                    req.done = True
-                    self.slots[i] = None
-                    if req.submitted_t is not None:
-                        self._h_request.observe(time.time() - req.submitted_t)
+                self._emit(i, req, int(nxt[i]))
         self.ticks += 1
         self._h_tick.observe(time.time() - t0)
         return len(live)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
-        all_reqs = list(self.pending)
+    def run_until_drained(self, max_ticks: int = 10_000) -> DrainResult:
+        """Tick until queue and slots are empty (or ``max_ticks``). Returns
+        EVERY request that was submitted — finished or not — with
+        ``.drained`` flagging exhaustion, so callers can never silently lose
+        the requests that were still occupying slots."""
+        submitted = [r for r in self.slots if r is not None] + list(self.pending)
         for _ in range(max_ticks):
             if not self.tick() and not self.pending:
                 break
-        return [r for r in all_reqs if r.done]
+        drained = not self._live() and not self.pending
+        if not drained:
+            obs_metrics.event("serving.drain_exhausted",
+                              live=len(self._live()),
+                              pending=len(self.pending), max_ticks=max_ticks)
+        return DrainResult(submitted, drained)

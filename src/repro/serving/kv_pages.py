@@ -1,0 +1,126 @@
+"""Paged compressed KV cache: fixed-size pages from a device-resident pool.
+
+The pool replaces the dense ``(batch, max_len)`` KV cache for models whose
+decode path routes through ``layers.decode_attention`` (``supports_paged_kv``).
+Layout per layer: ``(n_pages, page_size, kv_heads, head_dim)`` — exactly the
+model's own ``cache_spec`` with ``(batch, max_len)`` reinterpreted as
+``(n_pages, page_size)``, so ``blockfloat8`` pages ride the existing int8
+block-quantized machinery unchanged (codes + per-(token, head) scales).
+
+Why pages: admitted work is bounded by *cache capacity* (pool bytes), not by
+``batch_slots`` — a slot only costs what its request actually needs
+(``ceil(tokens / page_size)`` pages, reserved up-front so a request can never
+OOM mid-flight), and a compressed pool holds ~2x the pages of a bf16 pool at
+equal bytes, which is exactly the serving-capacity claim of the fixed-rate
+mode.
+
+Isolation contract (the PR-9 bugfix): page 0 is a reserved zero page that is
+never allocated; free lanes' page-table rows point at it, so any gather
+through a dead slot reads exact zeros. Pages freed on request completion are
+zeroed on-device *and* returned to the free list — a recycled slot can never
+observe a previous occupant's keys/values, regardless of masking.
+
+Allocation is host-side (plain Python lists); only the page *contents* and
+the zeroing of freed pages touch the device. The page table is rebuilt as a
+(batch_slots, max_pages) int32 array each tick — values change, shapes don't,
+so the engine's jitted step never retraces.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+class PoolExhausted(Exception):
+    """Requested pages exceed the free pool (admission must defer)."""
+
+
+class PagePool:
+    """Host-side page allocator over a device-resident pooled KV cache."""
+
+    def __init__(self, model, codec, batch_slots: int, max_len: int,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 pool_bytes: Optional[int] = None):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        self.page_size = page_size
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.max_pages = -(-max_len // page_size)  # table width per slot
+        # bytes of ONE page across all layers, from the model's own spec
+        self.page_nbytes = sum(
+            np.dtype(s.dtype).itemsize * int(np.prod(s.shape))
+            for s in jax.tree.leaves(model.cache_spec(1, page_size, codec)))
+        if pool_bytes is not None:
+            n_pages = max(1, pool_bytes // self.page_nbytes)
+        if n_pages is None:
+            # default: enough pages for every slot at full max_len
+            n_pages = batch_slots * self.max_pages
+        self.n_pages = int(n_pages) + 1  # +1: reserved zero page (id 0)
+        # the pool IS the model cache with (batch, max_len) -> (pages, page)
+        self.cache = model.init_cache(self.n_pages, page_size, codec)
+        self._free: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self._slot_pages: dict[int, list[int]] = {}
+
+    # ---------------------------------------------------------- queries --
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-max(1, n_tokens) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return len(self._free) >= self.pages_needed(n_tokens)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def occupancy(self) -> float:
+        """Fraction of allocatable pages currently mapped to slots."""
+        total = self.n_pages - 1
+        return self.used_pages / total if total else 0.0
+
+    def nbytes(self) -> int:
+        return sum(np.dtype(x.dtype).itemsize * int(np.prod(x.shape))
+                   for x in jax.tree.leaves(self.cache))
+
+    def capacity_requests(self, n_tokens: int) -> int:
+        """How many requests of ``n_tokens`` the pool can hold concurrently."""
+        return (self.n_pages - 1) // self.pages_needed(n_tokens)
+
+    # ------------------------------------------------------- allocation --
+    def allocate(self, slot: int, n_tokens: int) -> list[int]:
+        """Reserve pages covering ``n_tokens`` for ``slot`` (worst case is
+        reserved up-front: a request can never run out mid-flight)."""
+        if slot in self._slot_pages:
+            raise ValueError(f"slot {slot} already holds pages")
+        need = self.pages_needed(min(n_tokens, self.max_len))
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"slot {slot} needs {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._slot_pages[slot] = pages
+        return pages
+
+    def free_slot(self, slot: int) -> list[int]:
+        """Unmap ``slot``'s pages and return their ids — the engine zeroes
+        them on-device before they can be handed to another request."""
+        pages = self._slot_pages.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+    def page_table(self) -> np.ndarray:
+        """(batch_slots, max_pages) int32; unmapped entries = 0 (zero page)."""
+        table = np.zeros((self.batch_slots, self.max_pages), np.int32)
+        for slot, pages in self._slot_pages.items():
+            table[slot, :len(pages)] = pages
+        return table
+
+    def slot_pages(self, slot: int) -> list[int]:
+        return list(self._slot_pages.get(slot, ()))

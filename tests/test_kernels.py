@@ -215,3 +215,46 @@ class TestKVCAttention:
         assert got.dtype == jnp.bfloat16
         np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
                                    rtol=0.02, atol=0.02)
+
+
+class TestKVCAttentionVectorIndex:
+    """Per-slot (B,) lengths (continuous batching): each lane masks at its
+    OWN position, and lane -1 (free slot) attends over nothing."""
+
+    def test_vector_matches_per_row_scalar(self):
+        rng = np.random.default_rng(7)
+        b, s, h, d = 4, 256, 4, 64
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        kc = jnp.asarray(rng.integers(-127, 128, size=(b, s, h, d)).astype(np.int8))
+        vc = jnp.asarray(rng.integers(-127, 128, size=(b, s, h, d)).astype(np.int8))
+        ks = jnp.asarray(rng.uniform(1e-3, 2e-2, size=(b, s, h)).astype(np.float32))
+        vs = jnp.asarray(rng.uniform(1e-3, 2e-2, size=(b, s, h)).astype(np.float32))
+        lens = jnp.asarray([3, 100, 251, 17], jnp.int32)
+        got = ops.kvc_attention(q, kc, ks, vc, vs, lens)
+        want_vec = ref.kvc_decode_attention_ref(q, kc, ks, vc, vs, lens)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want_vec),
+                                   rtol=2e-5, atol=2e-6)
+        for i, n in enumerate([3, 100, 251, 17]):  # stitch scalar rows
+            row = ref.kvc_decode_attention_ref(
+                q[i:i + 1], kc[i:i + 1], ks[i:i + 1], vc[i:i + 1],
+                vs[i:i + 1], jnp.int32(n))
+            np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                       np.asarray(row), rtol=2e-5, atol=2e-6)
+
+    def test_dead_lane_ignores_cache(self):
+        """index -1: the lane's output must not depend on cache contents."""
+        rng = np.random.default_rng(9)
+        b, s, h, d = 2, 128, 4, 64
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        kc = jnp.asarray(rng.integers(-127, 128, size=(b, s, h, d)).astype(np.int8))
+        vc = jnp.asarray(rng.integers(-127, 128, size=(b, s, h, d)).astype(np.int8))
+        ks = jnp.asarray(rng.uniform(1e-3, 1e-2, size=(b, s, h)).astype(np.float32))
+        vs = jnp.asarray(rng.uniform(1e-3, 1e-2, size=(b, s, h)).astype(np.float32))
+        lens = jnp.asarray([-1, 64], jnp.int32)
+        out1 = ops.kvc_attention(q, kc, ks, vc, vs, lens)
+        out2 = ops.kvc_attention(q, kc.at[0].set(99), ks, vc.at[0].set(-99),
+                                 vs, lens)
+        np.testing.assert_allclose(np.asarray(out1[1]), np.asarray(out2[1]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]),
+                                   rtol=1e-6)

@@ -99,3 +99,296 @@ class TestCodecLayer:
         np.testing.assert_allclose(np.asarray(kk[:, 5]), 3.0, rtol=1e-2)
         np.testing.assert_allclose(np.asarray(vv[:, 5]), -3.0, rtol=1e-2)
         assert float(jnp.abs(kk[:, 4]).max()) == 0.0  # untouched slots stay zero
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert done.drained
+    return done
+
+
+class TestRecycleIsolation:
+    """The PR-9 bugfix: a slot freed mid-flight and recycled to a new
+    request must behave exactly as a fresh engine — bitwise."""
+
+    @pytest.mark.parametrize("codec,paged", [
+        ("none", True), ("blockfloat8", True), ("none", False),
+        ("blockfloat8", False)])
+    def test_recycled_slot_bitwise_equals_fresh(self, tiny, codec, paged):
+        cfg, model, params = tiny
+        mk = lambda: ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=64, codec=codec, paged=paged))
+        # A finishes while B still decodes; C is admitted into A's old slot
+        eng = mk()
+        a = Request(uid=0, prompt=[9, 8, 7, 6], max_new_tokens=2)
+        b = Request(uid=1, prompt=[5, 4, 3], max_new_tokens=12)
+        c = Request(uid=2, prompt=[2, 7, 1, 8, 2], max_new_tokens=6)
+        _drain(eng, [a, b, c])
+        fresh = Request(uid=2, prompt=[2, 7, 1, 8, 2], max_new_tokens=6)
+        _drain(mk(), [fresh])
+        assert c.out_tokens == fresh.out_tokens, (codec, paged)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_staggered_admission_any_order(self, tiny, seed):
+        """Property over random arrival orders: whatever order requests
+        arrive (and however slots get recycled between them), each
+        request's output matches its solo run on a fresh engine."""
+        cfg, model, params = tiny
+        rng = np.random.default_rng(seed)
+        protos = [([int(t) for t in rng.integers(1, 99, size=2 + i % 3)],
+                   2 + int(rng.integers(0, 4))) for i in range(4)]
+        mk = lambda: ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=48, codec="blockfloat8"))
+        solo = []
+        for prompt, max_new in protos:
+            r = Request(uid=0, prompt=list(prompt), max_new_tokens=max_new)
+            _drain(mk(), [r])
+            solo.append(r.out_tokens)
+        order = rng.permutation(len(protos))
+        eng = mk()
+        live = []
+        for uid in order:
+            prompt, max_new = protos[uid]
+            r = Request(uid=int(uid), prompt=list(prompt), max_new_tokens=max_new)
+            eng.submit(r)
+            live.append(r)
+            for _ in range(int(rng.integers(0, 3))):  # stagger admissions
+                eng.tick()
+        done = eng.run_until_drained()
+        assert done.drained
+        for r in live:
+            assert r.out_tokens == solo[r.uid], (seed, r.uid)
+
+    def test_cache_zeroed_after_drain(self, tiny):
+        """Zero-on-free: once every request retires, the entire cache (paged
+        pool or dense) is exactly zero — isolation by construction."""
+        cfg, model, params = tiny
+        for paged in (True, False):
+            eng = ServingEngine(model, params, EngineConfig(
+                batch_slots=2, max_len=32, codec="blockfloat8", paged=paged))
+            _drain(eng, [Request(uid=u, prompt=[3 + u, 1, 4], max_new_tokens=3)
+                         for u in range(3)])
+            for leaf in jax.tree.leaves(eng.cache):
+                assert float(jnp.abs(leaf.astype(jnp.float32)).max()) == 0.0, paged
+
+    def test_nonpaged_arch_fallback_recycle(self):
+        """Archs without paged support (rwkv6: recurrent state, no KV) serve
+        through the dense per-slot fallback and still isolate recycled
+        slots — state is zeroed on free."""
+        cfg = registry.get_config("rwkv6-1.6b", smoke=True)
+        model = registry.build_model(cfg)
+        params = init_params(model.specs(), jax.random.key(0), jnp.float32)
+        mk = lambda: ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=32, codec="none"))
+        eng = mk()
+        assert not eng.paged and not eng._can_prefill
+        a = Request(uid=0, prompt=[9, 8, 7], max_new_tokens=2)
+        b = Request(uid=1, prompt=[5, 4], max_new_tokens=8)
+        c = Request(uid=2, prompt=[2, 7, 1], max_new_tokens=4)
+        _drain(eng, [a, b, c])
+        fresh = Request(uid=2, prompt=[2, 7, 1], max_new_tokens=4)
+        _drain(mk(), [fresh])
+        assert c.out_tokens == fresh.out_tokens
+
+
+class TestSamplingAndConfig:
+    def test_temperature_sampling_deterministic_seeded(self, tiny):
+        cfg, model, params = tiny
+        outs = []
+        for _ in range(2):
+            eng = ServingEngine(model, params, EngineConfig(
+                batch_slots=2, max_len=32, codec="none", greedy=False,
+                temperature=0.8, sample_seed=7))
+            r = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=6)
+            _drain(eng, [r])
+            assert len(r.out_tokens) == 6
+            assert all(0 <= t < cfg.padded_vocab for t in r.out_tokens)
+            outs.append(r.out_tokens)
+        assert outs[0] == outs[1]  # same seed -> same sequence
+
+    def test_invalid_temperature_rejected(self):
+        with pytest.raises(ValueError, match="temperature"):
+            EngineConfig(greedy=False, temperature=0.0)
+        with pytest.raises(ValueError, match="temperature"):
+            EngineConfig(greedy=False, temperature=-1.0)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="codec"):
+            EngineConfig(codec="zstd")
+        with pytest.raises(ValueError, match="fused"):
+            EngineConfig(attention="fused", codec="none")
+        with pytest.raises(ValueError, match="paged"):
+            EngineConfig(paged="yes")
+
+    def test_prompt_longer_than_max_len_rejected(self, tiny):
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none", max_len=8)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(uid=0, prompt=list(range(1, 9)), max_new_tokens=2))
+
+
+class TestDrainAndTicks:
+    def test_drain_returns_all_submitted_with_flag(self, tiny):
+        """Exhausting max_ticks must not silently drop the requests that
+        were still occupying slots (the old engine returned only finished
+        pending-queue requests)."""
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none", slots=2)
+        reqs = [Request(uid=u, prompt=[1 + u, 2], max_new_tokens=50)
+                for u in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_drained(max_ticks=3)
+        assert len(done) == 3  # every submitted request comes back
+        assert done.drained is False
+        assert any(not r.done for r in done)
+        done2 = eng.run_until_drained()  # finish the job
+        assert done2.drained and all(r.done for r in done2)
+
+    def test_idle_ticks_are_counted(self, tiny):
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none")
+        before = eng.ticks
+        assert eng.tick() == 0  # idle: no requests
+        assert eng.tick() == 0
+        assert eng.ticks == before + 2
+
+    def test_prefill_matches_tokenwise_decode(self, tiny):
+        """Chunked prefill lands the same greedy continuation as feeding the
+        prompt token by token through decode_step."""
+        cfg, model, params = tiny
+        eng_pf = _mk_engine(model, params, "none")
+        assert eng_pf._can_prefill
+        r_pf = Request(uid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=6)
+        _drain(eng_pf, [r_pf])
+        eng_tw = _mk_engine(model, params, "none")
+        eng_tw._can_prefill = False  # force the token-by-token fallback
+        r_tw = Request(uid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=6)
+        _drain(eng_tw, [r_tw])
+        assert r_pf.out_tokens == r_tw.out_tokens
+
+    def test_fused_attention_agrees(self, tiny):
+        """attention='fused' routes decode through the Pallas dequant-attend
+        kernel (interpret mode off-TPU); greedy tokens agree with XLA."""
+        cfg, model, params = tiny
+        seqs = {}
+        for mode in ("xla", "fused"):
+            eng = ServingEngine(model, params, EngineConfig(
+                batch_slots=2, max_len=32, codec="blockfloat8",
+                attention=mode))
+            assert eng._fused == (mode == "fused")
+            r = Request(uid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=8)
+            _drain(eng, [r])
+            seqs[mode] = r.out_tokens
+        agree = sum(a == b for a, b in zip(seqs["xla"], seqs["fused"]))
+        assert agree >= 6, seqs
+
+
+class TestAdmission:
+    def test_ladder_quantization(self):
+        from repro.serving.admission import AdmissionConfig, AdmissionController
+        ctl = AdmissionController(AdmissionConfig(ladder=(1, 2, 4)), 8)
+        assert ctl.rung(1) == 1 and ctl.rung(2) == 2 and ctl.rung(3) == 4
+        assert ctl.rung(9) == 4  # demand beyond top rung clamps
+        assert ctl.admittable(live=0, queued=3) == 4
+        assert ctl.admittable(live=4, queued=10) == 0  # max_live = 1 batch
+
+    def test_max_live_batches(self):
+        from repro.serving.admission import AdmissionConfig, AdmissionController
+        ctl = AdmissionController(
+            AdmissionConfig(ladder=(2,), max_live_batches=2), 8)
+        assert ctl.max_live == 4
+        assert ctl.admittable(live=3, queued=5) == 1
+
+    def test_validation(self):
+        from repro.serving.admission import AdmissionConfig, AdmissionController
+        with pytest.raises(ValueError):
+            AdmissionController(AdmissionConfig(ladder=(0, 2)), 8)
+        with pytest.raises(ValueError):
+            AdmissionController(AdmissionConfig(ladder=(16,)), 8)
+        with pytest.raises(ValueError):
+            AdmissionController(AdmissionConfig(max_live_batches=0), 8)
+
+    def test_engine_respects_ladder(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=4, max_len=32, codec="none", ladder=(2,),
+            max_live_batches=1))
+        for u in range(4):
+            eng.submit(Request(uid=u, prompt=[1 + u, 2], max_new_tokens=4))
+        eng.tick()
+        assert len(eng._live()) <= 2  # one batch of rung 2
+        done = eng.run_until_drained()
+        assert done.drained and len(done) == 4
+
+
+class TestPagePool:
+    def test_alloc_free_roundtrip(self, tiny):
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PagePool, PoolExhausted
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=4,
+                        max_len=64, page_size=16)
+        assert pool.max_pages == 4
+        total = pool.free_pages
+        pages = pool.allocate(0, 40)  # 3 pages
+        assert len(pages) == 3 and 0 not in pages  # page 0 is reserved
+        table = pool.page_table()
+        assert list(table[0][:3]) == pages and table[0][3] == 0
+        assert (table[1:] == 0).all()
+        assert pool.used_pages == 3
+        with pytest.raises(ValueError):
+            pool.allocate(0, 8)  # slot already mapped
+        freed = pool.free_slot(0)
+        assert sorted(freed) == sorted(pages)
+        assert pool.free_pages == total and (pool.page_table() == 0).all()
+
+    def test_exhaustion_and_capacity(self, tiny):
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PagePool, PoolExhausted
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=8,
+                        max_len=32, page_size=16, n_pages=4)
+        assert pool.capacity_requests(32) == 2
+        pool.allocate(0, 32)
+        pool.allocate(1, 32)
+        assert not pool.can_admit(16)
+        with pytest.raises(PoolExhausted):
+            pool.allocate(2, 16)
+
+    def test_bf8_pool_admits_1p8x_at_equal_bytes(self, tiny):
+        """The serving-capacity claim, in pure byte accounting: at equal
+        pool bytes and production-like head_dim, the compressed pool holds
+        >= 1.8x the concurrent requests (CI asserts the live version from
+        the benchmark record)."""
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PagePool
+        cfg, model, params = tiny
+        cfg64 = registry.get_config("starcoder2-3b", smoke=True).scaled(
+            head_dim=64)
+        model64 = registry.build_model(cfg64)
+        raw = PagePool(model64, L2.KVCodecConfig("none"), 32, 64, 16)
+        budget = raw.page_nbytes * 32
+        caps = {}
+        for codec in ("none", "blockfloat8"):
+            pool = PagePool(model64, L2.KVCodecConfig(codec), 32, 64, 16,
+                            pool_bytes=budget)
+            caps[codec] = pool.capacity_requests(64)
+        assert caps["blockfloat8"] >= 1.8 * caps["none"], caps
+
+    def test_engine_bounded_by_pool_not_slots(self, tiny):
+        """cache capacity, not batch_slots, bounds admitted work: a pool of
+        2 requests' worth of pages admits 2 of 6 despite 6 free slots."""
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=6, max_len=32, codec="none", paged=True,
+            page_size=16, pool_pages=4))
+        for u in range(6):
+            eng.submit(Request(uid=u, prompt=[1 + u, 2], max_new_tokens=29))
+        eng.tick()
+        assert len(eng._live()) == 2 and len(eng.pending) == 4
+        done = eng.run_until_drained()
+        assert done.drained and len(done) == 6
+        assert all(r.done for r in done)
