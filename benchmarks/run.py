@@ -41,7 +41,7 @@ BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_throughput.json"
 # direction inference from key names: which way is "better"?
 _HIGHER_SUFFIXES = ("_mbs", "_mbps", "_gbps", "_x", "ratio", "_savings",
                     "tokens_per_s")
-_HIGHER_SUBSTRINGS = ("throughput", "speedup", "reduction")
+_HIGHER_SUBSTRINGS = ("throughput", "speedup", "reduction", "goodput")
 _LOWER_SUFFIXES = ("_s",)
 _LOWER_SUBSTRINGS = ("wall", "blip")
 # noise floor for lower-better (timing) keys: sub-millisecond baselines
@@ -95,6 +95,17 @@ def compare_records(base: dict, cur: dict, threshold: float = 0.20
                      f"baseline mode={base.get('mode')!r} — n differs, "
                      "deltas below are not apples-to-apples")
     fb, fc = flatten_bench(base), flatten_bench(cur)
+    # a section living in only one record (e.g. `serving` landed after the
+    # baseline was cut) is a schema drift warning, never a regression —
+    # there is nothing to compare it against
+    sec_b = {k.split(".")[0].split("[")[0] for k in fb}
+    sec_c = {k.split(".")[0].split("[")[0] for k in fc}
+    for s in sorted(sec_b - sec_c):
+        lines.append(f"WARNING: section '{s}' only in baseline — "
+                     "absent from the current record, skipping")
+    for s in sorted(sec_c - sec_b):
+        lines.append(f"WARNING: section '{s}' only in current record — "
+                     "no baseline to compare, skipping")
     shared = sorted(set(fb) & set(fc))
     by_section: dict[str, list] = {}
     for key in shared:
@@ -230,6 +241,11 @@ def main(argv=None) -> int:
         for r in record["serving"]["load"]:
             print("serving:", r)
         print("serving equal-bytes:", record["serving"]["equal_bytes"])
+        fd = record["serving"]["fault_drill"]
+        print(f"serving fault-drill: goodput_ratio={fd['goodput_ratio']:.3f} "
+              f"(clean={fd['clean']['goodput']:.3f}, "
+              f"killed={fd['killed']['goodput']:.3f}, "
+              f"redispatched={fd['killed']['redispatched']})")
         write_bench_json(record)
         print(f"\nsmoke benchmarks complete in {time.time() - t0:.1f}s")
         if args.compare is not None:
@@ -278,6 +294,11 @@ def main(argv=None) -> int:
     for r in record["serving"]["load"]:
         print("serving:", r)
     print("serving equal-bytes:", record["serving"]["equal_bytes"])
+    fd = record["serving"]["fault_drill"]
+    print(f"serving fault-drill: goodput_ratio={fd['goodput_ratio']:.3f} "
+          f"(clean={fd['clean']['goodput']:.3f}, "
+          f"killed={fd['killed']['goodput']:.3f}, "
+          f"redispatched={fd['killed']['redispatched']})")
     write_bench_json(record)
 
     _section("§V-D — optimization guideline (best-fit configs)")

@@ -34,7 +34,9 @@ from repro.configs import registry
 from repro.models import layers as L
 from repro.models.spec import init_params
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.faults import ServeFaultInjector, ServeFaultPlan
 from repro.serving.kv_pages import PagePool
+from repro.serving.router import Router, RouterConfig, RouterRequest
 
 # head_dim 64 so the bf8 page-byte ratio (1+4/hd)/2 sits at production-like
 # 0.53x (the smoke configs' hd=16 would understate capacity at 0.625x)
@@ -148,6 +150,77 @@ def equal_bytes_concurrency(model, params, codec_pages: int = 32,
     return out
 
 
+# --------------------------------------------- fault-injected router load ----
+def run_router_load(model, params, codec: str, n_requests: int, *,
+                    replicas: int = 2, kill_after: int = 4,
+                    kill: bool = False, prompt_len: int = 6, max_new: int = 8,
+                    batch_slots: int = 4, max_len: int = 64,
+                    seed: int = 0) -> dict:
+    """Push ``n_requests`` through the multi-replica router and measure
+    p50/p99 end-to-end latency and goodput (fraction of requested tokens
+    that completed).  With ``kill=True`` one replica hangs mid-run —
+    ``kill_after`` of its own ticks in — and the router must quarantine it
+    and re-dispatch its in-flight work onto the survivors."""
+    rng = np.random.default_rng(seed)
+    prompts = [[int(t) for t in rng.integers(1, 200, size=prompt_len)]
+               for _ in range(n_requests)]
+    engines = [ServingEngine(model, params, EngineConfig(
+        batch_slots=batch_slots, max_len=max_len, codec=codec))
+        for _ in range(replicas)]
+    # warmup: compile prefill + decode on every replica before the clock
+    # starts, so latency measures serving (and re-dispatch), not jit time
+    for eng in engines:
+        eng.submit(Request(uid=-1, prompt=[1] * prompt_len, max_new_tokens=2))
+        eng.run_until_drained()
+    injector = None
+    if kill:
+        # hang the last replica a few of ITS OWN ticks into the run
+        victim = replicas - 1
+        plan = ServeFaultPlan.kill_replica(
+            victim, engines[victim].ticks + kill_after)
+        injector = ServeFaultInjector(plan)
+        engines[victim].tick_hook = injector.hook_for(victim)
+    router = Router(engines, RouterConfig(max_retries=3))
+    for uid in range(n_requests):
+        router.submit(RouterRequest(uid=uid, prompt=prompts[uid],
+                                    max_new_tokens=max_new))
+    t0 = time.time()
+    done = router.run_until_drained()
+    wall = time.time() - t0
+    lat = np.array([r.completed_t - r.submitted_t for r in done.completed])
+    good_toks = sum(len(r.tokens) for r in done.completed)
+    return {
+        "codec": codec,
+        "killed_replica": kill,
+        "n_requests": int(n_requests),
+        "completed": int(len(done.completed)),
+        "shed": int(len(done.shed_requests)),
+        "p50_s": float(np.percentile(lat, 50)) if lat.size else -1.0,
+        "p99_s": float(np.percentile(lat, 99)) if lat.size else -1.0,
+        "wall_s": float(wall),
+        "goodput": float(good_toks / (n_requests * max_new)),
+        "redispatched": int(sum(1 for r in done if r.retries > 0)),
+        "healthy_replicas": int(len(router.healthy())),
+        "faults_fired": len(injector.log) if injector else 0,
+    }
+
+
+def fault_drill_sweep(model, params, codec: str = "blockfloat8",
+                      n_requests: int = 12, **kw) -> dict:
+    """The benchmark half of the serving fault drill: identical load with
+    and without a mid-run replica kill.  ``goodput_ratio`` (killed / clean)
+    is the CI smoke gate (>= 0.95): the router must re-dispatch the dead
+    replica's work, not drop it."""
+    clean = run_router_load(model, params, codec, n_requests, kill=False, **kw)
+    killed = run_router_load(model, params, codec, n_requests, kill=True, **kw)
+    return {
+        "clean": clean,
+        "killed": killed,
+        "goodput_ratio": (killed["goodput"] / clean["goodput"]
+                          if clean["goodput"] else 0.0),
+    }
+
+
 # ------------------------------------------------------------- section ----
 def bench_section(smoke: bool = True) -> dict:
     """The ``serving`` section of BENCH_throughput*.json."""
@@ -158,6 +231,8 @@ def bench_section(smoke: bool = True) -> dict:
         "arch": cfg.name,
         "load": load_sweep(model, params, rates, n_requests),
         "equal_bytes": equal_bytes_concurrency(model, params),
+        "fault_drill": fault_drill_sweep(
+            model, params, n_requests=8 if smoke else 24),
     }
 
 
@@ -175,9 +250,19 @@ def main(argv=None) -> int:
     print(f"equal-bytes pool ({eb['pool_bytes']} B, {eb['n_tokens']} tok/req): "
           f"none={eb['none_admitted']} blockfloat8={eb['blockfloat8_admitted']} "
           f"ratio={eb['admitted_ratio_x']:.2f}x")
+    fd = section["fault_drill"]
+    for tag in ("clean", "killed"):
+        r = fd[tag]
+        print(f"router {tag}: completed={r['completed']}/{r['n_requests']} "
+              f"shed={r['shed']} p99={r['p99_s']:.3f}s "
+              f"goodput={r['goodput']:.3f} redispatched={r['redispatched']} "
+              f"healthy={r['healthy_replicas']}")
+    print(f"goodput ratio (killed/clean): {fd['goodput_ratio']:.3f}")
     ok = eb["admitted_ratio_x"] >= 1.8
     print("capacity gate (>=1.8x):", "PASS" if ok else "FAIL")
-    return 0 if ok else 1
+    ok_goodput = fd["goodput_ratio"] >= 0.95
+    print("goodput gate (>=0.95x):", "PASS" if ok_goodput else "FAIL")
+    return 0 if ok and ok_goodput else 1
 
 
 if __name__ == "__main__":

@@ -6,6 +6,12 @@ can run as a paged compressed pool (``--pool-pages`` / ``--pool-bytes``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
         --requests 8 --max-new 16 --codec blockfloat8
+
+With ``--replicas N`` (or ``--fault-seed``) requests go through the
+multi-replica router instead of a bare engine: health-checked failover,
+per-request deadlines (``--deadline-ms``), bounded retry onto a different
+replica (``--retries``), and typed shedding.  ``--fault-seed`` arms the
+seeded serving fault drill (`serving/faults.py`) against the replicas.
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ import jax.numpy as jnp
 from repro.configs import registry
 from repro.models.spec import init_params, param_count
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.faults import ServeFaultInjector, ServeFaultPlan
+from repro.serving.router import Router, RouterConfig, RouterRequest
 
 
 def main(argv=None) -> int:
@@ -42,6 +50,14 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="> 0 enables seeded sampling instead of greedy")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 serves through the multi-replica router")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="arm the seeded serving fault drill (implies router)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request completion deadline (router only)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="max re-dispatches after losing a replica")
     args = ap.parse_args(argv)
 
     cfg = registry.get_config(args.arch, smoke=args.smoke)
@@ -50,27 +66,69 @@ def main(argv=None) -> int:
     print(f"{cfg.name}: {param_count(model.specs())/1e6:.1f}M params, codec={args.codec}")
 
     ladder = tuple(int(x) for x in args.ladder.split(",") if x) if args.ladder else ()
-    eng = ServingEngine(model, params, EngineConfig(
+    ecfg = EngineConfig(
         batch_slots=args.slots, max_len=args.max_len, codec=args.codec,
         paged={"auto": "auto", "on": True, "off": False}[args.paged],
         page_size=args.page_size, pool_pages=args.pool_pages,
         pool_bytes=args.pool_bytes, ladder=ladder,
         greedy=args.temperature <= 0,
         temperature=args.temperature if args.temperature > 0 else 1.0,
-        sample_seed=args.seed))
-    if eng.paged:
-        print(f"paged KV: {eng.pool.n_pages - 1} pages x {eng.pool.page_size} tokens "
-              f"({eng.pool.nbytes()/1e6:.2f} MB pool)")
+        sample_seed=args.seed)
+
+    routed = args.replicas > 1 or args.fault_seed is not None
+    if not routed:
+        eng = ServingEngine(model, params, ecfg)
+        if eng.paged:
+            print(f"paged KV: {eng.pool.n_pages - 1} pages x {eng.pool.page_size} tokens "
+                  f"({eng.pool.nbytes()/1e6:.2f} MB pool)")
+        for uid in range(args.requests):
+            eng.submit(Request(uid=uid, prompt=[1 + uid % 7, 2, 3],
+                               max_new_tokens=args.max_new))
+        t0 = time.time()
+        done = eng.run_until_drained()
+        dt = time.time() - t0
+        if not done.drained:
+            print("WARNING: drain exhausted max_ticks with requests still live")
+        toks = sum(len(r.out_tokens) for r in done)
+        print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s); "
+              f"KV cache {eng.cache_nbytes()/1e6:.2f} MB")
+        return 0
+
+    injector = None
+    if args.fault_seed is not None:
+        plan = ServeFaultPlan.drill(args.fault_seed,
+                                    n_replicas=max(1, args.replicas))
+        injector = ServeFaultInjector(plan)
+        print(f"fault drill armed: seed={args.fault_seed}, "
+              f"{len(plan.events)} events")
+    engines = [
+        ServingEngine(model, params, ecfg,
+                      tick_hook=injector.hook_for(rid) if injector else None)
+        for rid in range(max(1, args.replicas))]
+    router = Router(engines, RouterConfig(
+        deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        max_retries=args.retries,
+        integrity_every=2 if injector else 0))
+    print(f"router: {len(engines)} replicas, retries={args.retries}, "
+          f"deadline={args.deadline_ms or 'none'}ms")
     for uid in range(args.requests):
-        eng.submit(Request(uid=uid, prompt=[1 + uid % 7, 2, 3], max_new_tokens=args.max_new))
+        router.submit(RouterRequest(uid=uid, prompt=[1 + uid % 7, 2, 3],
+                                    max_new_tokens=args.max_new))
     t0 = time.time()
-    done = eng.run_until_drained()
+    done = router.run_until_drained()
     dt = time.time() - t0
     if not done.drained:
-        print("WARNING: drain exhausted max_ticks with requests still live")
-    toks = sum(len(r.out_tokens) for r in done)
-    print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s); "
-          f"KV cache {eng.cache_nbytes()/1e6:.2f} MB")
+        print("WARNING: router drain exhausted max_ticks with work unresolved")
+    toks = sum(len(r.tokens) for r in done)
+    shed = done.shed_requests
+    print(f"{len(done)} requests: {len(done.completed)} completed, "
+          f"{len(shed)} shed, {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s); "
+          f"{len(router.healthy())}/{len(router.replicas)} replicas healthy")
+    for r in shed:
+        print(f"  shed uid={r.uid}: {r.shed.reason} ({r.shed.detail})")
+    if injector:
+        fired = ", ".join(f"r{r}t{t}:{k}" for r, t, k in injector.log) or "none"
+        print(f"faults fired: {fired}")
     return 0
 
 

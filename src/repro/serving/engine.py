@@ -59,6 +59,12 @@ class Request:
     # (queue wait + every tick the request was live) without the engine
     # keeping a side table
     submitted_t: Optional[float] = None
+    # sampling-key offset: output token t of this request samples with key
+    # fold_in(fold_in(seed, uid), key_offset + t).  A router re-dispatching
+    # a half-decoded request onto another replica sets key_offset to the
+    # number of tokens already emitted, so the continuation draws exactly
+    # the tokens the original dispatch would have drawn.
+    key_offset: int = 0
 
 
 @dataclasses.dataclass
@@ -106,18 +112,34 @@ class EngineConfig:
 class DrainResult(list):
     """All requests submitted before the drain, in submission order.
     ``drained`` is False when ``max_ticks`` ran out with work still live —
-    callers must check it instead of silently losing unfinished requests."""
+    callers must check it instead of silently losing unfinished requests.
+    ``stalls`` is the consecutive no-progress tick count at exit: nonzero
+    means the drain hit the livelock guard (queued work that can never be
+    admitted, e.g. a request whose worst case exceeds the page pool)."""
 
-    def __init__(self, requests, drained: bool):
+    def __init__(self, requests, drained: bool, stalls: int = 0):
         super().__init__(requests)
         self.drained = drained
+        self.stalls = stalls
+
+
+class KVIntegrityError(RuntimeError):
+    """The zero-on-free invariant is violated: a free page / lane holds
+    nonzero state (corruption, or a buggy recycle path)."""
 
 
 class ServingEngine:
-    def __init__(self, model, params, cfg: EngineConfig):
+    def __init__(self, model, params, cfg: EngineConfig, *,
+                 tick_hook=None, clock=time.time):
         self.model = model
         self.params = params
         self.cfg = cfg
+        # injectable seams for the serving fault drill (and for routers that
+        # need deterministic time): ``tick_hook(engine)`` runs at the top of
+        # every tick, before any state changes — raising from it aborts the
+        # tick cleanly; ``clock`` backs every timestamp the engine takes.
+        self.tick_hook = tick_hook
+        self.clock = clock
         self.codec = L.KVCodecConfig(cfg.codec)
         paged_ok = bool(getattr(model, "supports_paged_kv", False))
         self.paged = paged_ok if cfg.paged == "auto" else bool(cfg.paged)
@@ -144,8 +166,9 @@ class ServingEngine:
         self._fused = cfg.codec == "blockfloat8" and (
             cfg.attention == "fused"
             or (cfg.attention == "auto" and jax.default_backend() == "tpu"))
-        self._key = jax.random.key(cfg.sample_seed)
+        self._base_key = jax.random.key(cfg.sample_seed)
         self.ticks = 0
+        self.last_admits = 0  # admissions on the most recent tick
 
         codec, fused = self.codec, self._fused
 
@@ -168,8 +191,20 @@ class ServingEngine:
         if self._can_prefill:
             self._prefill = jax.jit(_with_fused(
                 lambda p, c, t, i, n: model.prefill(p, c, t, i, n, codec)))
-        self._sample_jit = jax.jit(lambda key, logits: jax.random.categorical(
-            key, logits.astype(jnp.float32) / cfg.temperature, axis=-1))
+
+        # per-request sampling keys: output token t of request uid draws
+        # from fold_in(fold_in(seed, uid), key_offset + t) — a pure function
+        # of (seed, uid, token index), independent of tick order, batch
+        # composition, and which engine replica runs the request.  A
+        # re-dispatched request therefore reproduces its token stream
+        # exactly on any replica.
+        def _sample_lane(key, uid, t, logits):
+            k = jax.random.fold_in(jax.random.fold_in(key, uid), t)
+            return jax.random.categorical(
+                k, logits.astype(jnp.float32) / cfg.temperature, axis=-1)
+
+        self._sample_jit = jax.jit(
+            jax.vmap(_sample_lane, in_axes=(None, 0, 0, 0)))
         # zero-on-free: every arch's cache leaves are (n_layers, batch, ...),
         # and the paged pool's are (n_layers, n_pages, ...) — axis 1 is the
         # recycled resource in both. Padding freed-page ids with 0 re-zeroes
@@ -196,7 +231,7 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens does not fit "
                 f"max_len={self.cfg.max_len} (needs at least one decode step)")
-        req.submitted_t = time.time()
+        req.submitted_t = self.clock()
         self.pending.append(req)
 
     def _live(self) -> list[int]:
@@ -246,7 +281,7 @@ class ServingEngine:
         Lanes not being prefilled pass length 0 / start -1: their writes are
         dropped and their logits ignored, so live decoding lanes are
         untouched."""
-        t0 = time.time()
+        t0 = self.clock()
         chunk = self.cfg.prefill_chunk
         longest = max(len(r.prompt) for _, r in admitted)
         width = -(-longest // chunk) * chunk  # pad -> bounded recompiles
@@ -266,18 +301,27 @@ class ServingEngine:
             logits, self.cache = self._prefill(
                 self.params, self.cache, jnp.asarray(tokens), index,
                 jnp.asarray(length))
-            nxt = self._sample(logits)
+            nxt = self._sample(logits, admitted)
         for slot, req in admitted:
             self.pos[slot] = len(req.prompt)
             self._emit(slot, req, int(nxt[slot]))
-        self._h_prefill.observe(time.time() - t0)
+        self._h_prefill.observe(self.clock() - t0)
 
     # --------------------------------------------------------- sampling --
-    def _sample(self, logits: jax.Array) -> np.ndarray:
+    def _sample(self, logits: jax.Array,
+                lanes: list[tuple[int, Request]]) -> np.ndarray:
+        """Next token per lane.  Sampled lanes use their request's own key
+        stream — (seed, uid, token index) — never a shared per-tick split,
+        so the draw is identical whatever else shares the batch."""
         if self.cfg.greedy:
             return np.asarray(jnp.argmax(logits, axis=-1))
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(self._sample_jit(sub, logits))
+        uids = np.zeros(logits.shape[0], np.int32)
+        toks = np.zeros(logits.shape[0], np.int32)
+        for slot, req in lanes:
+            uids[slot] = req.uid & 0x7FFFFFFF
+            toks[slot] = req.key_offset + len(req.out_tokens)
+        return np.asarray(self._sample_jit(
+            self._base_key, jnp.asarray(uids), jnp.asarray(toks), logits))
 
     # ------------------------------------------------------- completion --
     def _emit(self, slot: int, req: Request, tok: int) -> None:
@@ -287,10 +331,9 @@ class ServingEngine:
                 or self.pos[slot] >= self.cfg.max_len - 1):
             self._retire(slot, req)
 
-    def _retire(self, slot: int, req: Request) -> None:
+    def _release_slot(self, slot: int) -> None:
         """Free the slot and zero its cache state on-device BEFORE it can be
         recycled — the isolation half of the PR-9 bugfix."""
-        req.done = True
         self.slots[slot] = None
         self.pos[slot] = -1
         if self.paged:
@@ -300,24 +343,116 @@ class ServingEngine:
             self.cache = self._zero_pages(self.cache, jnp.asarray(padded))
         else:
             self.cache = self._zero_slot(self.cache, jnp.int32(slot))
+
+    def _retire(self, slot: int, req: Request) -> None:
+        req.done = True
+        self._release_slot(slot)
         self._c_completed.inc()
         if req.submitted_t is not None:
-            self._h_request.observe(time.time() - req.submitted_t)
+            self._h_request.observe(self.clock() - req.submitted_t)
+
+    def cancel(self, req: Request) -> bool:
+        """Evict ``req`` (queued or live) without marking it done; a live
+        request's slot is released and zeroed.  Returns False when the
+        request is not owned by this engine (already retired, or never
+        submitted here)."""
+        if req in self.pending:
+            self.pending.remove(req)
+            return True
+        for slot, s in enumerate(self.slots):
+            if s is req:
+                self._release_slot(slot)
+                return True
+        return False
+
+    def drain_requests(self) -> list[Request]:
+        """Evict ALL unfinished work — live slots (released + zeroed, slot
+        order) then the pending queue — and return the evicted requests.
+        This is the failover path: a router pulling requests off a failed
+        replica to re-dispatch them elsewhere."""
+        evicted: list[Request] = []
+        for slot, s in enumerate(self.slots):
+            if s is not None:
+                evicted.append(s)
+                self._release_slot(slot)
+        evicted.extend(self.pending)
+        self.pending.clear()
+        return evicted
+
+    # -------------------------------------------------- health / repair --
+    def free_resource_ids(self) -> list[int]:
+        """Axis-1 indices of the cache that must be exactly zero right now:
+        unallocated pages plus the reserved zero page (paged), or free lanes
+        (dense).  Empty when every resource is in use."""
+        if self.paged:
+            return sorted(self.pool.free_ids())
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def check_kv_integrity(self) -> bool:
+        """Verify the zero-on-free invariant on-device: every free page /
+        free lane (and the reserved zero page) holds exact zeros.  This is
+        the detection point for corrupt-KV poison — a router probes it
+        before trusting a replica's output."""
+        ids = self.free_resource_ids()
+        if not ids:
+            return True
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        total = 0.0
+        for leaf in jax.tree.leaves(self.cache):
+            total += float(jnp.abs(leaf[:, idx].astype(jnp.float32)).sum())
+        return total == 0.0
+
+    def reset(self) -> None:
+        """Rebuild the cache (and page allocator) to pristine all-zero
+        state — a router 'restarting' a quarantined replica after draining
+        it.  Refuses while any work is still owned by the engine."""
+        if self._live() or self.pending:
+            raise RuntimeError("reset() with live or pending requests; "
+                               "drain_requests() first")
+        if self.paged:
+            # out-of-band reservations (fault-drill pool pressure) die with
+            # the restart — only request-owned pages block a reset, and
+            # drain_requests() already released those
+            for owner in self.pool.owners():
+                self.pool.free_slot(owner)
+            self.pool.reset()
+            self.cache = self.pool.cache
+        else:
+            self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self.pos[:] = -1
+
+    def can_accept(self, req: Request) -> bool:
+        """Would ``req`` be admitted promptly?  A free slot exists, nothing
+        is queued ahead of it, and the page pool covers its worst case.
+        Routers use this to place work on the replica that will actually
+        run it instead of burying it in a busy replica's queue."""
+        if self.pending or not any(s is None for s in self.slots):
+            return False
+        if len(req.prompt) > self.cfg.max_len - 1:
+            return False
+        if self.paged:
+            cap = min(len(req.prompt) + req.max_new_tokens, self.cfg.max_len)
+            return self.pool.can_admit(cap)
+        return True
 
     # ------------------------------------------------------------- tick --
     def tick(self) -> int:
         """One engine step: admit from the queue, then feed each live slot
         its next token at its OWN position. Returns the number of live
-        requests (0 = idle tick — still counted and timed)."""
-        t0 = time.time()
-        self._admit()
+        requests (0 = idle tick — still counted and timed).  The injectable
+        ``tick_hook`` fires first, before any state changes — an exception
+        from it aborts the tick with the engine untouched."""
+        t0 = self.clock()
+        if self.tick_hook is not None:
+            self.tick_hook(self)
+        self.last_admits = len(self._admit())
         live = self._live()
         self._g_occupancy.set(len(live) / self.cfg.batch_slots)
         if self.paged:
             self._g_cache.set(self.pool.occupancy())
         if not live:
             self.ticks += 1
-            self._h_tick.observe(time.time() - t0)
+            self._h_tick.observe(self.clock() - t0)
             return 0
         tokens = np.zeros(self.cfg.batch_slots, np.int32)
         for i in live:
@@ -331,28 +466,43 @@ class ServingEngine:
         with obs_trace.span("serving.tick", live=len(live)):
             logits, self.cache = self._step(self.params, self.cache,
                                             jnp.asarray(tokens), index)
-            nxt = self._sample(logits)
+            nxt = self._sample(logits, [(i, self.slots[i]) for i in live])
         for i in live:
             req = self.slots[i]
             self.pos[i] += 1
             if self.pos[i] >= len(req.prompt):
                 self._emit(i, req, int(nxt[i]))
         self.ticks += 1
-        self._h_tick.observe(time.time() - t0)
+        self._h_tick.observe(self.clock() - t0)
         return len(live)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> DrainResult:
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          stall_ticks: int = 100) -> DrainResult:
         """Tick until queue and slots are empty (or ``max_ticks``). Returns
         EVERY request that was submitted — finished or not — with
         ``.drained`` flagging exhaustion, so callers can never silently lose
-        the requests that were still occupying slots."""
+        the requests that were still occupying slots.
+
+        Livelock guard: ``stall_ticks`` consecutive ticks with zero
+        progress (no admission, no live lane — queued work that can never
+        be admitted, e.g. a worst case bigger than the page pool) emits a
+        ``serving.stall`` event and stops early instead of silently burning
+        the remaining ``max_ticks``; the count comes back as ``.stalls``."""
         submitted = [r for r in self.slots if r is not None] + list(self.pending)
+        stalls = 0
         for _ in range(max_ticks):
-            if not self.tick() and not self.pending:
+            live = self.tick()
+            if not live and not self.pending:
+                break
+            stalls = 0 if (live or self.last_admits) else stalls + 1
+            if stall_ticks and stalls >= stall_ticks:
+                obs_metrics.event("serving.stall", consecutive=stalls,
+                                  pending=len(self.pending),
+                                  max_ticks=max_ticks)
                 break
         drained = not self._live() and not self.pending
-        if not drained:
+        if not drained and (not stall_ticks or stalls < stall_ticks):
             obs_metrics.event("serving.drain_exhausted",
                               live=len(self._live()),
                               pending=len(self.pending), max_ticks=max_ticks)
-        return DrainResult(submitted, drained)
+        return DrainResult(submitted, drained, stalls=stalls)

@@ -32,11 +32,19 @@ import math
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
 class PoolExhausted(Exception):
     """Requested pages exceed the free pool (admission must defer)."""
+
+
+class PageAccountingError(RuntimeError):
+    """Page bookkeeping violated — a double-freed page id, a free touching
+    the reserved zero page, or an id outside the pool.  Raised instead of
+    silently corrupting the free list (a double-freed page handed to two
+    requests at once would be a cross-request leak)."""
 
 
 class PagePool:
@@ -97,30 +105,80 @@ class PagePool:
     # ------------------------------------------------------- allocation --
     def allocate(self, slot: int, n_tokens: int) -> list[int]:
         """Reserve pages covering ``n_tokens`` for ``slot`` (worst case is
-        reserved up-front: a request can never run out mid-flight)."""
-        if slot in self._slot_pages:
-            raise ValueError(f"slot {slot} already holds pages")
-        need = self.pages_needed(min(n_tokens, self.max_len))
-        if need > len(self._free):
+        reserved up-front: a request can never run out mid-flight).  On
+        :class:`PoolExhausted` nothing is mutated — the free count and the
+        slot map are exactly as before the call."""
+        return self.reserve_pages(
+            slot, self.pages_needed(min(n_tokens, self.max_len)))
+
+    def reserve_pages(self, owner, n_pages: int) -> list[int]:
+        """Map ``n_pages`` raw pages to ``owner`` — a batch slot id, or any
+        hashable for out-of-band reservations (the fault drill's
+        pool-pressure events squeeze capacity through this, never by
+        reaching into the free list)."""
+        if owner in self._slot_pages:
+            raise ValueError(f"slot {owner!r} already holds pages")
+        if n_pages > len(self._free):
             raise PoolExhausted(
-                f"slot {slot} needs {need} pages, {len(self._free)} free")
-        pages = [self._free.pop() for _ in range(need)]
-        self._slot_pages[slot] = pages
+                f"slot {owner!r} needs {n_pages} pages, "
+                f"{len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._slot_pages[owner] = pages
         return pages
 
-    def free_slot(self, slot: int) -> list[int]:
+    def free_slot(self, slot) -> list[int]:
         """Unmap ``slot``'s pages and return their ids — the engine zeroes
-        them on-device before they can be handed to another request."""
-        pages = self._slot_pages.pop(slot, [])
+        them on-device before they can be handed to another request.
+        Raises :class:`PageAccountingError` on a double-freed id, the
+        reserved zero page, or an id outside the pool, with the mapping
+        left untouched."""
+        pages = self._slot_pages.get(slot, [])
+        free = set(self._free)
+        for p in pages:
+            if p == 0:
+                raise PageAccountingError(
+                    f"slot {slot!r} maps the reserved zero page")
+            if not 0 < p < self.n_pages:
+                raise PageAccountingError(
+                    f"slot {slot!r} maps page {p} outside the pool "
+                    f"(n_pages={self.n_pages})")
+            if p in free:
+                raise PageAccountingError(
+                    f"double free: page {p} of slot {slot!r} is already on "
+                    "the free list")
+        self._slot_pages.pop(slot, None)
         self._free.extend(pages)
         return pages
 
+    def reset(self) -> None:
+        """Zero the pooled cache and rebuild the free list — a replica
+        'restart'.  Refuses while any owner still maps pages."""
+        if self._slot_pages:
+            raise PageAccountingError(
+                f"reset() with pages still mapped: {sorted(map(str, self._slot_pages))}")
+        self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self._free = list(range(self.n_pages - 1, 0, -1))
+
+    def owners(self) -> list:
+        """Everything currently mapping pages — batch slot ids and any
+        out-of-band reservation owners."""
+        return list(self._slot_pages)
+
+    def free_ids(self) -> tuple[int, ...]:
+        """Page ids that must be exactly zero right now: the reserved zero
+        page plus every unallocated page (the zero-on-free invariant the
+        router's integrity probe checks)."""
+        return (0, *self._free)
+
     def page_table(self) -> np.ndarray:
-        """(batch_slots, max_pages) int32; unmapped entries = 0 (zero page)."""
+        """(batch_slots, max_pages) int32; unmapped entries = 0 (zero page).
+        Non-slot owners (out-of-band reservations) hold pages but have no
+        table row — their pages are simply unavailable."""
         table = np.zeros((self.batch_slots, self.max_pages), np.int32)
         for slot, pages in self._slot_pages.items():
-            table[slot, :len(pages)] = pages
+            if isinstance(slot, int) and 0 <= slot < self.batch_slots:
+                table[slot, :len(pages)] = pages
         return table
 
-    def slot_pages(self, slot: int) -> list[int]:
+    def slot_pages(self, slot) -> list[int]:
         return list(self._slot_pages.get(slot, ()))

@@ -1,0 +1,69 @@
+"""benchmarks/run.py --compare semantics: direction inference, flattening,
+and the section-drift warning (a section present in only one record warns
+instead of crashing or counting as a regression)."""
+
+from benchmarks.run import compare_records, flatten_bench, key_direction
+
+
+def _base():
+    return {
+        "mode": "smoke",
+        "packer": {"pack_mbs": 100.0, "wall_s": 2.0},
+        "serving": {"load": [{"codec": "none", "tokens_per_s": 50.0}]},
+    }
+
+
+class TestKeyDirection:
+    def test_directions(self):
+        assert key_direction("packer.pack_mbs") == "higher"
+        assert key_direction("serving.load[none].tokens_per_s") == "higher"
+        assert key_direction("x.goodput") == "higher"
+        assert key_direction("x.goodput_ratio") == "higher"
+        assert key_direction("a.wall_s") == "lower"
+        assert key_direction("fault_drill.killed.p99_s") == "lower"
+        assert key_direction("serving.load[none].n_requests") is None
+
+    def test_flatten_labels_lists_by_identity(self):
+        flat = flatten_bench(
+            {"modeled": [{"kernel": "pack", "mbs": 9.0}], **_base()})
+        assert flat["modeled[pack].mbs"] == 9.0
+        assert flat["serving.load[0].tokens_per_s"] == 50.0  # no id field
+        assert flat["packer.pack_mbs"] == 100.0
+        assert "mode" not in flat  # strings are not measurements
+
+
+class TestCompare:
+    def test_no_regression_on_identical_records(self):
+        lines, regressions = compare_records(_base(), _base())
+        assert regressions == []
+
+    def test_detects_regression(self):
+        cur = _base()
+        cur["packer"]["pack_mbs"] = 10.0  # -90%
+        lines, regressions = compare_records(_base(), cur)
+        assert len(regressions) == 1 and "pack_mbs" in regressions[0]
+
+    def test_section_only_in_current_warns_not_crashes(self):
+        """The satellite: `serving` (or any new section) landing after an
+        old baseline was cut must be a warning, never a regression."""
+        base = _base()
+        del base["serving"]
+        lines, regressions = compare_records(base, _base())
+        assert regressions == []
+        warn = [ln for ln in lines if "only in current record" in ln]
+        assert len(warn) == 1 and "'serving'" in warn[0]
+
+    def test_section_only_in_baseline_warns_not_crashes(self):
+        cur = _base()
+        del cur["serving"]
+        lines, regressions = compare_records(_base(), cur)
+        assert regressions == []
+        warn = [ln for ln in lines if "only in baseline" in ln]
+        assert len(warn) == 1 and "'serving'" in warn[0]
+
+    def test_disjoint_records_still_flag_no_shared_keys(self):
+        lines, regressions = compare_records(
+            {"mode": "smoke", "a": {"x_mbs": 1.0}},
+            {"mode": "smoke", "b": {"y_mbs": 2.0}})
+        assert any("no shared numeric keys" in ln for ln in lines)
+        assert regressions  # wholly disjoint records are an error, not drift

@@ -378,6 +378,69 @@ class TestPagePool:
             caps[codec] = pool.capacity_requests(64)
         assert caps["blockfloat8"] >= 1.8 * caps["none"], caps
 
+    def test_double_free_raises_typed_error(self, tiny):
+        """An aliased page id must be caught, not silently pushed onto the
+        free list (two requests sharing a page = cross-request leak)."""
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PageAccountingError, PagePool
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=4,
+                        max_len=64, page_size=16)
+        pages = pool.allocate(0, 40)
+        pool._slot_pages[1] = [pages[0]]  # simulate an aliasing bug
+        pool.free_slot(0)                 # pages[0] back on the free list
+        before = pool.free_pages
+        with pytest.raises(PageAccountingError, match="double free"):
+            pool.free_slot(1)
+        assert pool.free_pages == before  # nothing mutated by the failure
+
+    def test_freeing_zero_page_raises_typed_error(self, tiny):
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PageAccountingError, PagePool
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=4,
+                        max_len=64, page_size=16)
+        pool._slot_pages[0] = [0]
+        with pytest.raises(PageAccountingError, match="zero page"):
+            pool.free_slot(0)
+        pool._slot_pages[1] = [pool.n_pages + 5]
+        with pytest.raises(PageAccountingError, match="outside the pool"):
+            pool.free_slot(1)
+
+    def test_failed_admission_leaves_accounting_untouched(self, tiny):
+        """PoolExhausted must not leak a partial reservation."""
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import PagePool, PoolExhausted
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=8,
+                        max_len=64, page_size=16, n_pages=4)
+        pool.allocate(0, 32)  # 2 of 4 pages
+        free_before = pool.free_pages
+        with pytest.raises(PoolExhausted):
+            pool.allocate(1, 64)  # needs 4, only 2 free
+        assert pool.free_pages == free_before
+        assert pool.slot_pages(1) == []
+        pool.allocate(1, 32)  # the 2 free pages are still allocatable
+        assert pool.free_pages == 0
+
+    def test_out_of_band_reservation_and_reset(self, tiny):
+        from repro.models import layers as L2
+        from repro.serving.kv_pages import (PageAccountingError, PagePool)
+        cfg, model, params = tiny
+        pool = PagePool(model, L2.KVCodecConfig("none"), batch_slots=4,
+                        max_len=64, page_size=16, n_pages=6)
+        pool.reserve_pages(("fault", 0, 2), 2)
+        assert pool.free_pages == 4
+        # non-slot owners hold pages but never appear in the page table
+        assert (pool.page_table() == 0).all()
+        assert ("fault", 0, 2) in pool.owners()
+        with pytest.raises(PageAccountingError, match="still mapped"):
+            pool.reset()
+        pool.free_slot(("fault", 0, 2))
+        pool.reset()
+        assert pool.free_pages == 6 and pool.free_ids() == tuple(
+            [0, *pool._free])
+
     def test_engine_bounded_by_pool_not_slots(self, tiny):
         """cache capacity, not batch_slots, bounds admitted work: a pool of
         2 requests' worth of pages admits 2 of 6 despite 6 free slots."""
@@ -392,3 +455,129 @@ class TestPagePool:
         done = eng.run_until_drained()
         assert done.drained and len(done) == 6
         assert all(r.done for r in done)
+
+
+class TestPerRequestSampling:
+    """Satellite of the serving fault drill: sampling keys are a pure
+    function of (seed, uid, token index), so a re-dispatched sampled
+    request reproduces its stream on any replica."""
+
+    def _mk(self, model, params):
+        return ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=48, codec="none", greedy=False,
+            temperature=0.8, sample_seed=7))
+
+    def test_sampled_continuation_matches_solo_run(self, tiny):
+        cfg, model, params = tiny
+        solo = Request(uid=9, prompt=[3, 1, 4], max_new_tokens=8)
+        _drain(self._mk(model, params), [solo])
+        k = 3  # re-dispatch after k emitted tokens, as the router would
+        cont = Request(uid=9, prompt=[3, 1, 4] + solo.out_tokens[:k],
+                       max_new_tokens=8 - k, key_offset=k)
+        _drain(self._mk(model, params), [cont])
+        assert cont.out_tokens == solo.out_tokens[k:]
+
+    def test_sampled_independent_of_batch_composition(self, tiny):
+        """The old per-tick key split made a lane's draw depend on what
+        else shared the batch; per-request keys must not."""
+        cfg, model, params = tiny
+        solo = Request(uid=5, prompt=[2, 7, 1], max_new_tokens=6)
+        _drain(self._mk(model, params), [solo])
+        crowded = Request(uid=5, prompt=[2, 7, 1], max_new_tokens=6)
+        other = Request(uid=6, prompt=[8, 8], max_new_tokens=9)
+        _drain(self._mk(model, params), [crowded, other])
+        assert crowded.out_tokens == solo.out_tokens
+
+
+class TestLivelockGuard:
+    def test_unservable_request_stalls_out_early(self, tiny):
+        """A request whose worst case exceeds the whole pool can never be
+        admitted: the drain must stop at stall_ticks with the stall count
+        reported, not burn max_ticks silently."""
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=64, codec="none", paged=True,
+            page_size=16, pool_pages=2))  # 32 tokens of pool
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=60))
+        done = eng.run_until_drained(max_ticks=500, stall_ticks=20)
+        assert done.drained is False
+        assert done.stalls >= 20
+        assert eng.ticks < 100  # stopped early, nowhere near max_ticks
+
+    def test_normal_drain_reports_zero_stalls(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=32, codec="none"))
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=4))
+        done = eng.run_until_drained()
+        assert done.drained and done.stalls == 0
+
+
+class TestFailoverPrimitives:
+    """The engine-side seams the router builds on: cancel, drain,
+    integrity probe, reset."""
+
+    def test_cancel_queued_and_live(self, tiny):
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none", slots=2)
+        a = Request(uid=0, prompt=[1, 2], max_new_tokens=20)
+        b = Request(uid=1, prompt=[3, 4], max_new_tokens=20)
+        c = Request(uid=2, prompt=[5, 6], max_new_tokens=20)
+        for r in (a, b, c):
+            eng.submit(r)
+        eng.tick()  # a, b live; c queued
+        assert eng.cancel(c) and c not in eng.pending
+        assert eng.cancel(a) and len(eng._live()) == 1
+        assert not a.done  # cancelled, not completed
+        assert eng.cancel(a) is False  # already gone
+
+    def test_drain_requests_returns_everything_and_empties(self, tiny):
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none", slots=2)
+        reqs = [Request(uid=u, prompt=[1 + u], max_new_tokens=20)
+                for u in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.tick()
+        evicted = eng.drain_requests()
+        assert len(evicted) == 4 and not eng._live() and not eng.pending
+        # live slots were zeroed on eviction: invariant holds
+        assert eng.check_kv_integrity()
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_integrity_probe_detects_poison(self, tiny, paged):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=2, max_len=32, codec="none", paged=paged))
+        assert eng.check_kv_integrity()
+        # poison a FREE resource row, exactly like the fault injector
+        idx = eng.free_resource_ids()[0]
+        eng.cache = jax.tree.map(
+            lambda x: x.at[:, idx].set(jnp.asarray(17, x.dtype)), eng.cache)
+        assert eng.check_kv_integrity() is False
+        eng.reset()
+        assert eng.check_kv_integrity()
+
+    def test_reset_refuses_with_work_owned(self, tiny):
+        cfg, model, params = tiny
+        eng = _mk_engine(model, params, "none", slots=2)
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=8))
+        eng.tick()
+        with pytest.raises(RuntimeError, match="drain_requests"):
+            eng.reset()
+        eng.drain_requests()
+        eng.reset()  # now fine
+
+    def test_can_accept_reflects_capacity(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig(
+            batch_slots=1, max_len=32, codec="none", paged=True,
+            page_size=16))
+        r = Request(uid=0, prompt=[1, 2], max_new_tokens=4)
+        assert eng.can_accept(r)
+        eng.submit(r)
+        eng.tick()
+        assert not eng.can_accept(
+            Request(uid=1, prompt=[3], max_new_tokens=4))  # slot taken
+        assert not eng.can_accept(
+            Request(uid=2, prompt=list(range(1, 40)), max_new_tokens=4))
